@@ -1,0 +1,72 @@
+"""Aggregate the dry-run JSONs into the §Roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Emits CSV: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,
+model_flops,useful_ratio,peak_GiB_per_dev,one-liner.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+MOVE_HINTS = {
+    "collective": "shrink/overlap the per-layer activation AR/AG "
+                  "(wider data axis, narrower model axis, or comm overlap)",
+    "memory": "fuse elementwise chains & raise arithmetic intensity "
+              "(bigger microbatch per chip, bf16 cache)",
+    "compute": "already MXU-bound: improve tiling/padding so HLO FLOPs "
+               "approach MODEL_FLOPS",
+}
+
+
+def load_rows(d: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*_single.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": rl["mesh"],
+            "chips": rl["chips"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "model_flops": r["model_flops_global"],
+            "useful_ratio": rl["useful_ratio"],
+            "peak_gib": r["memory"]["peak_bytes_per_device"] / 2**30,
+            "hint": MOVE_HINTS.get(rl["dominant"], ""),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    if args.markdown:
+        print("| arch | shape | compute s | memory s | collective s | dominant "
+              "| useful | peak GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+                  f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+                  f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+                  f"| {r['peak_gib']:.2f} |")
+    else:
+        print("arch,shape,mesh,chips,compute_s,memory_s,collective_s,dominant,"
+              "model_flops,useful_ratio,peak_GiB_per_dev")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+                  f"{r['compute_s']:.4e},{r['memory_s']:.4e},"
+                  f"{r['collective_s']:.4e},{r['dominant']},"
+                  f"{r['model_flops']:.3e},{r['useful_ratio']:.3f},"
+                  f"{r['peak_gib']:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

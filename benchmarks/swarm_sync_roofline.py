@@ -1,0 +1,86 @@
+"""Roofline of the P2P-SL sync step itself (the paper's technique on-mesh).
+
+Lowers `propose` (the gossip merge) on the swarm mesh for a chosen arch and
+compares the collective bytes of the schedules:
+
+  fedavg/full payload   — faithful paper mechanism (dense weighted merge)
+  ring/full payload     — beyond-paper sparse P2P (ppermute)
+  fedavg/LoRA payload   — paper's payload optimization
+  ring/LoRA payload     — both (the TPU-native endpoint)
+
+Single-pod swarm mesh (node,data,model)=(4,4,16); multi-pod uses pod as the
+gossip axis — there the collective term is DCN traffic, the scarce resource
+the paper's schedule conserves.
+
+Usage: PYTHONPATH=src python -m benchmarks.swarm_sync_roofline [--arch minicpm-2b]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SwarmConfig, get_config
+from repro.core.lora import inject_lora
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_swarm_mesh
+from repro.launch.specs import param_shapes
+from repro.launch.train import make_swarm_sync_step
+from repro.models import build_model
+from repro.sharding.rules import shardings_for
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def stacked_param_sds(cfg, mesh, axis, n_nodes, lora):
+    model = build_model(cfg)
+    pshapes = param_shapes(model)
+    if lora:
+        pshapes = jax.eval_shape(
+            lambda: inject_lora(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshapes),
+                jax.random.key(0), rank=16))
+    pshard = shardings_for(pshapes, mesh)
+    inner_specs = jax.tree.map(lambda sh: sh.spec, pshard)
+
+    def stackit(s, sh):
+        spec = P(axis, *sh.spec)
+        return jax.ShapeDtypeStruct((n_nodes,) + s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(stackit, pshapes, pshard), inner_specs
+
+
+def measure(arch: str, topology: str, lora_only: bool, multi_pod: bool):
+    mesh, axis = make_swarm_mesh(4, multi_pod=multi_pod)
+    n_nodes = mesh.shape[axis]
+    cfg = get_config(arch)
+    scfg = SwarmConfig(n_nodes=n_nodes, topology=topology, merge="fedavg",
+                       lora_only=lora_only)
+    sds, inner = stacked_param_sds(cfg, mesh, axis, n_nodes, lora_only)
+    propose, _ = make_swarm_sync_step(scfg, mesh, axis, [1.0] * n_nodes,
+                                      param_specs=inner)
+    compiled = jax.jit(propose).lower(sds).compile()
+    coll = hlo_stats.collective_bytes(compiled.as_text())
+    return coll, n_nodes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    print("schedule,payload,coll_bytes_per_device,coll_s_at_50GBps,detail")
+    for topo in ("full", "ring"):
+        for lora in (False, True):
+            coll, n = measure(args.arch, topo, lora, args.multi_pod)
+            t = coll["total"] / hlo_stats.ICI_BW
+            detail = {k: v for k, v in coll.items()
+                      if k not in ("total", "count") and v}
+            print(f"{topo},{'lora' if lora else 'full'},{coll['total']},"
+                  f"{t:.4f},{detail}")
+
+
+if __name__ == "__main__":
+    main()

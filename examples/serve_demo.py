@@ -1,0 +1,58 @@
+"""Serving demo: batched greedy generation against a sharded-layout KV cache
+(the decode path the dry-run lowers for decode_32k / long_500k).
+
+Shows all three decode-state families: KV cache (dense), recurrent SSM state
+(mamba2 — O(1) memory, the long_500k path), and enc-dec cross-attention.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.serve import generate, make_serve_step
+from repro.models import build_model
+
+
+def demo(arch: str, max_new: int = 16):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    b, prompt_len, max_len = 4, 8, 64
+    prompt = jax.random.randint(jax.random.key(1), (b, prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    if cfg.is_encdec:
+        caches = model.init_cache(b, max_len)
+        from repro.models.encdec import encode
+        frames = jax.random.normal(jax.random.key(2),
+                                   (b, cfg.enc_seq_len, cfg.frontend_dim))
+        caches = dict(caches, enc_out=encode(params, cfg, frames))
+        step = jax.jit(make_serve_step(model))
+        tok = jnp.zeros((b, 1), jnp.int32)
+        outs = []
+        for i in range(max_new):
+            tok, caches = step(params, tok, caches, jnp.int32(i))
+            outs.append(tok)
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = generate(model, params, prompt, max_new, max_len)
+    dt = time.time() - t0
+    per_tok = dt / max_new * 1000
+    print(f"{arch:24s} [{cfg.family:6s}] generated {out.shape} "
+          f"({per_tok:.1f} ms/token incl. compile) sample: {out[0, :8].tolist()}")
+
+
+def main():
+    for arch in ("minicpm-2b",          # dense, KV cache
+                 "mamba2-370m",         # ssm, O(1) state (long_500k family)
+                 "phi3.5-moe-42b-a6.6b",  # moe decode w/ expert routing
+                 "seamless-m4t-medium"):  # enc-dec cross-attention
+        demo(arch)
+    print("OK — batched greedy serving across 4 decode-state families.")
+
+
+if __name__ == "__main__":
+    main()

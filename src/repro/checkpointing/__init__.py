@@ -1,0 +1,1 @@
+from repro.checkpointing.io import load_metadata, load_pytree, save_json, save_pytree  # noqa: F401

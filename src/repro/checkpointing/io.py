@@ -1,0 +1,65 @@
+"""Msgpack pytree checkpoints (per swarm node), offline-friendly.
+
+Layout: one ``<name>.msgpack`` file holding {treedef-paths: (dtype, shape,
+bytes)}. Restores exactly (dtype + shape verified). Swarm trainers save one
+checkpoint per node plus the sync log.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        flat[key] = {
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    return flat
+
+
+def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = {"leaves": _flatten(tree), "metadata": metadata or {}}
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = payload["leaves"]
+
+    def restore(p, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        entry = leaves[key]
+        arr = np.frombuffer(entry["data"], dtype=entry["dtype"]).reshape(entry["shape"])
+        if list(np.asarray(leaf).shape) != entry["shape"]:
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{np.asarray(leaf).shape} vs {entry['shape']}")
+        return jnp.asarray(arr)
+
+    return jax.tree_util.tree_map_with_path(restore, like)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read(), raw=False)["metadata"]
+
+
+def save_json(path: str, obj: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=float)

@@ -1,0 +1,12 @@
+"""P2P Swarm Learning core — the paper's contribution as a composable module."""
+from repro.core.merge_impl import (  # noqa: F401
+    fisher_merge, gradmatch_merge, merge, mix, stack_params, unstack_params,
+)
+from repro.core.swarm import (  # noqa: F401
+    NodeState, SwarmLearner, gate_decisions, gated_commit, mixing_matrix,
+    propose_merge,
+)
+from repro.core.topology import (  # noqa: F401
+    build_matrix, dynamic_matrix, fedavg_weights, full_matrix, ring_matrix,
+    spectral_gap,
+)

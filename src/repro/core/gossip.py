@@ -1,0 +1,144 @@
+"""SPMD gossip: the paper's P2P exchange realized as TPU mesh collectives.
+
+Two schedules, both operating on stacked pytrees whose leading node axis is
+sharded over a mesh axis (the swarm axis — `node` single-pod, `pod` multi-pod):
+
+  * ``fedavg_gossip``   — dense merge: one weighted ``psum`` over the swarm
+    axis (every node ends with the same weighted average). Collective bytes
+    per sync: ~2·P per link direction (reduce-scatter + all-gather lowering).
+  * ``ring_gossip``     — sparse P2P merge: two ``ppermute`` shifts; each node
+    mixes with its ring neighbours only. Collective bytes per sync: 2·P
+    point-to-point, no global reduction — the TPU-native analogue of the
+    paper's pairwise peer exchange, and the beyond-paper §Perf winner.
+  * ``matrix_gossip``   — arbitrary (possibly dynamic-membership) mixing
+    matrix via all_gather + local contraction; the faithful general form.
+
+All three return a stacked pytree of the same structure. `None` leaves (the
+non-payload part when lora_only sync is active) pass through untouched.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax>=0.6
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def _mapped(fn, mesh, axis, stacked, *extra, inner_specs=None):
+    """shard_map fn over the swarm axis, skipping None leaves.
+
+    inner_specs: optional pytree of PartitionSpecs for the NON-node dims of
+    each leaf. Without it the shard_map boundary implies replication on the
+    other mesh axes, which forces a full all-gather of (data, model)-sharded
+    params before every gossip round (measured: 12.6 GB/device of spurious
+    all-gather on minicpm-2b). With it, gossip exchanges only local shards.
+    """
+    nones = lambda x: x is None
+
+    def leaf_fn(x, spec):
+        if x is None:
+            return None
+        in_spec = P(axis, *(tuple(spec) if spec is not None else ()))
+        out = shard_map(fn, mesh,
+                        in_specs=(in_spec,) + tuple(P() for _ in extra),
+                        out_specs=in_spec)(x, *extra)
+        return out
+
+    if inner_specs is None:
+        inner_specs = jax.tree.map(lambda x: None, stacked, is_leaf=nones)
+    return jax.tree.map(leaf_fn, stacked, inner_specs, is_leaf=nones)
+
+
+def fedavg_gossip(stacked, weights, mesh, axis: str, inner_specs=None):
+    """Weighted global merge: θ_i ← Σ_j w_j θ_j for every node i."""
+    n = mesh.shape[axis]
+
+    def f(x, w):  # x: [N/n_shards, ...] local shard; w: [N]
+        idx = jax.lax.axis_index(axis)
+        per = x.shape[0]
+        wl = jax.lax.dynamic_slice_in_dim(w, idx * per, per, 0)
+        contrib = x.astype(jnp.float32) * wl.reshape((per,) + (1,) * (x.ndim - 1))
+        merged = jax.lax.psum(contrib.sum(0), axis)
+        return jnp.broadcast_to(merged, x.shape).astype(x.dtype)
+
+    w = jnp.asarray(weights, jnp.float32)
+    assert w.shape == (n,) or w.size % n == 0
+    return _mapped(f, mesh, axis, stacked, w, inner_specs=inner_specs)
+
+
+def ring_gossip(stacked, mesh, axis: str, self_weight: float = 0.5,
+                inner_specs=None):
+    """Sparse P2P: θ_i ← s·θ_i + (1-s)/2·(θ_{i-1} + θ_{i+1})."""
+    n = mesh.shape[axis]
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def f(x):
+        # wire dtype = param dtype (bf16): halves link bytes vs f32;
+        # the mixing arithmetic still accumulates in f32
+        left = jax.lax.ppermute(x, axis, fwd).astype(jnp.float32)
+        right = jax.lax.ppermute(x, axis, bwd).astype(jnp.float32)
+        side = (1.0 - self_weight) / 2.0
+        return (self_weight * x.astype(jnp.float32)
+                + side * (left + right)).astype(x.dtype)
+
+    return _mapped(f, mesh, axis, stacked, inner_specs=inner_specs)
+
+
+def fisher_gossip(stacked, fishers, mesh, axis: str, inner_specs=None,
+                  eps: float = 1e-8):
+    """Diagonal-Fisher-weighted merge over the swarm axis:
+    θ* = Σ_i F_i⊙θ_i / Σ_i F_i  (two psums), broadcast to every node.
+
+    The SPMD realization of `merge_impl.fisher_merge` — the principled
+    aggregation the paper cites ([6]) but never builds.
+    """
+    def f(x, fsh):
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        num = jax.lax.psum((ff * xf).sum(0), axis)
+        den = jax.lax.psum(ff.sum(0), axis)
+        return jnp.broadcast_to(num / den, x.shape).astype(x.dtype)
+
+    nones = lambda v: v is None
+
+    def leaf_fn(x, fsh, spec):
+        if x is None:
+            return None
+        in_spec = P(axis, *(tuple(spec) if spec is not None else ()))
+        return shard_map(f, mesh, in_specs=(in_spec, in_spec),
+                         out_specs=in_spec)(x, fsh)
+
+    if inner_specs is None:
+        inner_specs = jax.tree.map(lambda v: None, stacked, is_leaf=nones)
+    return jax.tree.map(leaf_fn, stacked, fishers, inner_specs, is_leaf=nones)
+
+
+def matrix_gossip(stacked, W, mesh, axis: str, inner_specs=None):
+    """General mixing matrix (dynamic membership): all_gather + local row mix."""
+    n = mesh.shape[axis]
+
+    def f(x, Wm):  # x: [per, ...]; Wm: [N, N]
+        idx = jax.lax.axis_index(axis)
+        per = x.shape[0]
+        allx = jax.lax.all_gather(x.astype(jnp.float32), axis, tiled=True)  # [N, ...]
+        rows = jax.lax.dynamic_slice_in_dim(Wm, idx * per, per, 0)          # [per, N]
+        flat = allx.reshape(allx.shape[0], -1)
+        out = rows @ flat
+        return out.reshape((per,) + x.shape[1:]).astype(x.dtype)
+
+    Wj = jnp.asarray(W, jnp.float32)
+    assert Wj.shape[0] == Wj.shape[1]
+    return _mapped(f, mesh, axis, stacked, Wj, inner_specs=inner_specs)

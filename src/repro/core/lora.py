@@ -1,0 +1,123 @@
+"""LoRA adapters as the swarm exchange payload.
+
+The paper's nodes exchange **LoRA-adapter weights only** (every 3 epochs,
+gRPC/TLS). Here adapters are injected directly into the param pytree: any
+2-D (or stacked 3-D, scan-over-layers) projection matrix named ``w`` under a
+matching module gains ``lora_A``/``lora_B``/``lora_scale`` siblings, which
+``repro.models.layers.linear`` applies transparently — zero model changes.
+
+``split_adapters`` partitions a pytree into (adapters, base); the swarm sync
+then merges only the adapter subtree, shrinking the gossip payload by ~99%
+(see EXPERIMENTS.md §Perf for the measured collective-byte effect).
+"""
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TARGETS = r"(attn|cross|mlp|experts|in_proj|out_proj|lm_head|head)"
+
+
+def inject_lora(params, key, rank: int = 16, alpha: float = 32.0,
+                targets: str = DEFAULT_TARGETS):
+    """Returns a new pytree with LoRA params added to matching linears."""
+    keys = iter(jax.random.split(key, 4096))
+
+    def rec(node, path):
+        if not isinstance(node, dict):
+            if isinstance(node, list):
+                return [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return node
+        out = {k: rec(v, f"{path}/{k}") for k, v in node.items()}
+        w = node.get("w")
+        if (
+            w is not None
+            and hasattr(w, "ndim")
+            and w.ndim in (2, 3)
+            and re.search(targets, path)
+            and "lora_A" not in node
+        ):
+            if w.ndim == 2:
+                i, o = w.shape
+                a_shape, b_shape = (i, rank), (rank, o)
+                scale = jnp.asarray(alpha / rank, jnp.float32)
+            else:  # stacked over layers: [L, in, out] — scale must scan too
+                l, i, o = w.shape
+                a_shape, b_shape = (l, i, rank), (l, rank, o)
+                scale = jnp.full((l,), alpha / rank, jnp.float32)
+            out["lora_A"] = (jax.random.normal(next(keys), a_shape)
+                             / jnp.sqrt(rank)).astype(w.dtype)
+            out["lora_B"] = jnp.zeros(b_shape, w.dtype)
+            out["lora_scale"] = scale
+        return out
+
+    return rec(params, "")
+
+
+def is_adapter_path(path: str) -> bool:
+    return "lora_" in path
+
+
+def _paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return flat
+
+
+def split_adapters(params, is_leaf=None) -> Tuple[dict, dict]:
+    """(adapters, base) — same treedef, non-matching leaves replaced by None.
+
+    is_leaf: forwarded to tree_map_with_path (needed when leaves are
+    PartitionSpecs, which are tuple subclasses jax would recurse into).
+    """
+    def path_str(p):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+
+    def select(pred):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: x if pred(path_str(p)) else None, params,
+            is_leaf=is_leaf)
+
+    return select(is_adapter_path), select(lambda s: not is_adapter_path(s))
+
+
+def combine(adapters, base):
+    """Inverse of split_adapters."""
+    return jax.tree.map(
+        lambda a, b: a if b is None else b, adapters, base,
+        is_leaf=lambda x: x is None)
+
+
+def adapter_only(params):
+    """Pytree with ONLY adapter leaves (others None) — the sync payload."""
+    return split_adapters(params)[0]
+
+
+def merge_lora_into_base(params):
+    """Fold A@B into w and drop adapters (deployment export)."""
+    def rec(node):
+        if isinstance(node, list):
+            return [rec(v) for v in node]
+        if not isinstance(node, dict):
+            return node
+        out = {k: rec(v) for k, v in node.items() if not k.startswith("lora_")}
+        if "lora_A" in node:
+            a, b = node["lora_A"], node["lora_B"]
+            scale = node["lora_scale"].astype(jnp.float32)
+            delta = jnp.einsum("...ir,...ro->...io",
+                               a.astype(jnp.float32), b.astype(jnp.float32))
+            if scale.ndim == 1:  # stacked-over-layers scale [L]
+                scale = scale[:, None, None]
+            out["w"] = (node["w"].astype(jnp.float32) + scale * delta).astype(node["w"].dtype)
+        return out
+
+    return rec(params)
+
+
+def payload_bytes(params, lora_only: bool) -> int:
+    """Sync payload size — the paper's communication-efficiency claim."""
+    tree = adapter_only(params) if lora_only else params
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree) if x is not None))

@@ -1,0 +1,166 @@
+"""P2P-SL orchestration: propose → validate → gated commit.
+
+The paper's loop (§3.1):
+  1. nodes train locally for `sync_every` steps,
+  2. exchange payloads (LoRA adapters, or full params) with peers,
+  3. each node merges locally (weighted averaging),
+  4. each node ACCEPTS the merge only if a local validation check clears the
+     80% threshold; otherwise it keeps its own params (autonomy).
+
+``SwarmLearner`` is the host-simulated N-node swarm used by the paper
+reproduction (CNN, 4 nodes) and by the multi-arch examples on CPU.
+The SPMD production path uses the same ``propose_merge``/``gated_commit``
+pure functions with `repro.core.gossip` collectives (see launch/train.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SwarmConfig
+import repro.core.topology as topo
+from repro.core import merge_impl as merge_lib
+from repro.core.lora import combine, split_adapters
+
+
+# ---------------------------------------------------------------------------
+# pure building blocks (shared by host-sim and SPMD paths)
+# ---------------------------------------------------------------------------
+
+def mixing_matrix(cfg: SwarmConfig, data_sizes: Sequence[float],
+                  active: Optional[Sequence[bool]] = None) -> np.ndarray:
+    weights = topo.fedavg_weights(data_sizes) if cfg.merge == "fedavg" else None
+    return topo.build_matrix(cfg.topology, cfg.n_nodes,
+                             weights=weights, self_weight=cfg.self_weight,
+                             active=active)
+
+
+def propose_merge(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
+    """Merge candidate for every node. Honors lora_only payload selection."""
+    if cfg.lora_only:
+        adapters, base = split_adapters(stacked)
+        merged_adapters = merge_lib.merge(
+            adapters, cfg.merge if cfg.merge in ("fisher", "gradmatch") else "fedavg",
+            W=W, fishers=split_adapters(fishers)[0] if fishers is not None else None,
+            weights=weights)
+        return combine(merged_adapters, base)
+    method = cfg.merge if cfg.merge in ("fisher", "gradmatch") else "fedavg"
+    return merge_lib.merge(stacked, method, W=W, fishers=fishers, weights=weights)
+
+
+def gate_decisions(metric_merged, metric_local, threshold: float,
+                   mode: str = "relative"):
+    """Per-node accept bits. `relative`: merged ≥ thr × local (robust default);
+    `absolute`: merged ≥ thr (the paper's literal 80% reading)."""
+    m, l = jnp.asarray(metric_merged), jnp.asarray(metric_local)
+    if mode == "relative":
+        return m >= threshold * l
+    return m >= threshold
+
+
+def gated_commit(candidate, local, gates):
+    """θ_i ← gate_i ? merged_i : local_i (leading node axis)."""
+    g = jnp.asarray(gates)
+
+    def one(c, l):
+        if c is None or l is None:
+            return c if l is None else l
+        gb = g.reshape((g.shape[0],) + (1,) * (c.ndim - 1))
+        return jnp.where(gb, c, l)
+
+    return jax.tree.map(one, candidate, local, is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# host-simulated swarm (paper reproduction path)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NodeState:
+    params: Any
+    opt_state: Any
+    data_size: int
+    fisher: Any = None
+    active: bool = True
+    history: list = field(default_factory=list)
+
+
+@dataclass
+class SwarmLearner:
+    """N independent learners + periodic gated P2P merge (the paper's system).
+
+    train_step_fn(params, opt_state, batch, step) -> (params, opt_state, metrics)
+    eval_fn(params, val_data) -> scalar metric in [0,1]
+    """
+
+    cfg: SwarmConfig
+    train_step_fn: Callable
+    eval_fn: Callable
+    nodes: List[NodeState]
+    step: int = 0
+    sync_log: list = field(default_factory=list)
+
+    @property
+    def n(self) -> int:
+        return len(self.nodes)
+
+    def local_steps(self, batches_per_node: Sequence[Any]):
+        """One local step on every active node."""
+        for node, batch in zip(self.nodes, batches_per_node):
+            if not node.active or batch is None:
+                continue
+            node.params, node.opt_state, metrics = self.train_step_fn(
+                node.params, node.opt_state, batch, self.step)
+            node.history.append({k: float(v) for k, v in metrics.items()})
+        self.step += 1
+
+    def maybe_sync(self, val_data_per_node: Sequence[Any], force: bool = False):
+        if not force and (self.step == 0 or self.step % self.cfg.sync_every != 0):
+            return None
+        return self.sync(val_data_per_node)
+
+    def sync(self, val_data_per_node: Sequence[Any]):
+        """One full propose→validate→commit round. Returns the round log."""
+        active = [n.active for n in self.nodes]
+        sizes = [n.data_size for n in self.nodes]
+        W = mixing_matrix(self.cfg, sizes, active=active)
+        stacked = merge_lib.stack_params([n.params for n in self.nodes])
+        fishers = None
+        if self.cfg.merge in ("fisher", "gradmatch"):
+            fishers = merge_lib.stack_params(
+                [n.fisher if n.fisher is not None else
+                 jax.tree.map(jnp.ones_like, n.params) for n in self.nodes])
+        weights = topo.fedavg_weights(sizes)
+        candidate = propose_merge(stacked, self.cfg, W,
+                                  fishers=fishers, weights=weights)
+        cand_nodes = merge_lib.unstack_params(candidate, self.n)
+
+        metric_local, metric_merged = [], []
+        for node, cand, val in zip(self.nodes, cand_nodes, val_data_per_node):
+            if node.active and val is not None:
+                metric_local.append(float(self.eval_fn(node.params, val)))
+                metric_merged.append(float(self.eval_fn(cand, val)))
+            else:
+                metric_local.append(1.0)
+                metric_merged.append(0.0)  # inactive nodes never accept
+        gates = np.array(gate_decisions(
+            jnp.asarray(metric_merged), jnp.asarray(metric_local),
+            self.cfg.val_threshold, mode="relative"))
+        gates &= np.asarray(active)
+
+        committed = gated_commit(candidate, stacked, gates)
+        for i, node in enumerate(self.nodes):
+            node.params = jax.tree.map(lambda x, i=i: x[i], committed)
+        log = {"step": self.step, "gates": gates.tolist(),
+               "metric_local": metric_local, "metric_merged": metric_merged,
+               "spectral_gap": topo.spectral_gap(W)}
+        self.sync_log.append(log)
+        return log
+
+    def set_active(self, idx: int, active: bool):
+        """Dynamic membership: node joins/leaves the swarm."""
+        self.nodes[idx].active = active

@@ -1,0 +1,91 @@
+"""Swarm peer topologies as mixing matrices.
+
+The paper's "dynamic networking" (§3.1) — nodes discover, join and leave the
+swarm — is modeled as a time-varying row-stochastic **mixing matrix** W_t:
+one gossip round maps node i's params to  θ_i ← Σ_j W_t[i,j] θ_j.
+
+  full + FedAvg weights  → classic FedAvg (one-round consensus)
+  ring                   → true peer-to-peer: each node touches only its two
+                           graph neighbours per round (maps to collective_permute)
+  dynamic                → membership-masked matrix; absent nodes are isolated
+                           (W[i,i]=1) and contribute nothing — the paper's
+                           join/leave semantics
+
+Consensus rate is governed by the spectral gap 1-|λ₂(W)|; exposed here so
+tests can assert the gossip contraction property.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def fedavg_weights(data_sizes: Sequence[float]) -> np.ndarray:
+    """Dataset-size-proportional weights (McMahan et al.)."""
+    w = np.asarray(data_sizes, np.float64)
+    if (w < 0).any() or w.sum() <= 0:
+        raise ValueError("data sizes must be non-negative with positive sum")
+    return w / w.sum()
+
+
+def full_matrix(n: int, weights: Optional[Sequence[float]] = None) -> np.ndarray:
+    """Fully-connected merge: every node averages everyone (FedAvg if weighted)."""
+    w = fedavg_weights(weights) if weights is not None else np.full(n, 1.0 / n)
+    return np.tile(w[None, :], (n, 1))
+
+
+def ring_matrix(n: int, self_weight: float = 0.5) -> np.ndarray:
+    """Symmetric ring gossip: self + two neighbours. Doubly stochastic."""
+    if not 0.0 < self_weight <= 1.0:
+        raise ValueError("self_weight in (0,1]")
+    side = (1.0 - self_weight) / 2.0
+    W = np.zeros((n, n))
+    for i in range(n):
+        W[i, i] = self_weight
+        W[i, (i - 1) % n] += side
+        W[i, (i + 1) % n] += side
+    return W
+
+
+def dynamic_matrix(base: np.ndarray, active: Sequence[bool]) -> np.ndarray:
+    """Mask out absent nodes and renormalize rows; absent rows become identity.
+
+    This is the paper's dynamic join/leave: an absent node neither sends nor
+    receives; remaining nodes redistribute its weight proportionally.
+    """
+    n = base.shape[0]
+    a = np.asarray(active, bool)
+    W = base * a[None, :]                       # drop absent senders
+    rows = W.sum(axis=1, keepdims=True)
+    W = np.divide(W, rows, out=np.zeros_like(W), where=rows > 0)
+    W[~a] = 0.0
+    W[~a, ~a] = 1.0                              # absent nodes keep their params
+    # a fully-isolated active row (all its peers absent) also keeps its params
+    dead = (~a[None, :] | np.eye(n, dtype=bool))  # noqa: F841 (doc)
+    for i in range(n):
+        if a[i] and W[i].sum() == 0:
+            W[i, i] = 1.0
+    return W
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    """1 - |λ₂|: per-round contraction rate of disagreement under gossip."""
+    eig = np.linalg.eigvals(W)
+    mags = np.sort(np.abs(eig))[::-1]
+    return float(1.0 - (mags[1] if len(mags) > 1 else 0.0))
+
+
+def build_matrix(topology: str, n: int, *, weights=None, self_weight=0.5,
+                 active=None) -> np.ndarray:
+    if topology == "full":
+        W = full_matrix(n, weights)
+    elif topology == "ring":
+        W = ring_matrix(n, self_weight)
+    elif topology == "dynamic":
+        W = full_matrix(n, weights)
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    if active is not None:
+        W = dynamic_matrix(W, active)
+    return W

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python) — that is the validation mode. On real
+TPU hardware pass ``interpret=False`` (the default resolves by backend).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.fused_merge import fused_merge, fused_merge_tree  # noqa: F401
+from repro.kernels.lora_matmul import lora_matmul  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+
+
+def default_interpret() -> bool:
+    """True when no TPU is attached (validation mode)."""
+    return jax.default_backend() != "tpu"
+
+
+def attention_op(q, k, v, *, causal=True, window=0, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+def merge_op(stacked, weights, self_idx, gate, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return fused_merge(stacked, weights, self_idx, gate, **kw)
+
+
+def lora_op(x, w, a, b, scale, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return lora_matmul(x, w, a, b, scale, **kw)
+
+
+def ssd_op(x, dt, a_log, bmat, cmat, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return ssd_scan(x, dt, a_log, bmat, cmat, **kw)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately naive implementations — independent of the kernel code paths and
+of the model modules, so a bug can't hide in shared code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_merge_ref(stacked, weights, self_idx, gate):
+    """stacked [N, D]; weights [N]; gate scalar bool.
+    out [D] = gate ? Σ_j w_j θ_j : θ_self   (fp32 accumulation)."""
+    merged = jnp.einsum("n,nd->d", weights.astype(jnp.float32),
+                        stacked.astype(jnp.float32))
+    keep = stacked[self_idx].astype(jnp.float32)
+    return jnp.where(gate, merged, keep).astype(stacked.dtype)
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """y = x @ W + scale * (x @ A) @ B, fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    y = y + scale * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q [B,H,S,D], k/v [B,Hkv,T,D] (GQA: H multiple of Hkv). Softmax in fp32."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = kpos <= qpos
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a_log, bmat, cmat):
+    """Exact sequential SSD recurrence (the slow oracle).
+
+    x [B,S,H,P]; dt [B,S,H] (already softplus'd); a_log [H];
+    bmat/cmat [B,S,H,N] (groups pre-broadcast to heads).
+    Returns y [B,S,H,P], final state [B,H,P,N].
+    """
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    decay = jnp.exp(dt * (-jnp.exp(a_log.astype(jnp.float32))))  # [B,S,H]
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    def step(state, inp):
+        xt, dct, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        state = state * dct[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(xdt, 1, 0), jnp.moveaxis(decay, 1, 0),
+          jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cmat.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

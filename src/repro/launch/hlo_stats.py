@@ -1,0 +1,132 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak)
+memory term     = HLO_bytes / (chips × HBM bw)
+collective term = collective_bytes / (chips × link bw)
+
+``cost_analysis`` provides flops/bytes; collective bytes are parsed out of the
+(post-SPMD-partitioning) HLO text by summing the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Matches the OP USE position (` all-reduce(`, ` all-gather-start(`, ...),
+# not the instruction NAME (`%all-reduce.3 = ...`). Result types — possibly a
+# tuple with /*index=k*/ comments — sit between `=` and the op keyword.
+# `-done` variants are skipped (the `-start` already carries the bytes).
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(_COMMENT_RE.sub("", type_str)):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float = 0.0
+    coll_detail: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # coll_bytes is already per-device (post-partition HLO result shapes)
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "useful_ratio": self.useful_ratio,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def roofline_from_compiled(compiled, *, arch, shape, mesh_name, chips,
+                           model_flops=0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    mem = float(cost.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=mem,
+                    coll_bytes=float(coll["total"]), model_flops=model_flops,
+                    coll_detail=coll)

@@ -1,0 +1,51 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax import; smoke tests must keep
+seeing 1 CPU device).
+
+  single-pod: (16, 16)    axes ("data", "model")      — 256 chips (v5e pod)
+  multi-pod:  (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+Swarm view: the P2P-SL gossip axis is `pod` on the multi-pod mesh (1 hospital
+= 1 pod; gossip is the only cross-DCN traffic) and a factored `node` axis on
+the single-pod swarm mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_swarm_mesh(n_nodes: int = 4, *, multi_pod: bool = False):
+    """Swarm training mesh: leading `node` axis is the gossip axis.
+
+    single-pod: (node, data, model) = (n, 16//n? , 16) — we factor the data
+    axis of the production mesh into (node, data): same 256 chips.
+    multi-pod: gossip over `pod` — (pod, data, model) = (2, 16, 16), i.e. the
+    production mesh itself; swarm code treats `pod` as the node axis.
+    """
+    import jax
+
+    if multi_pod:
+        mesh = make_production_mesh(multi_pod=True)
+        return mesh, "pod"
+    if 16 % n_nodes:
+        raise ValueError("n_nodes must divide 16 on the single-pod mesh")
+    shape = (n_nodes, 16 // n_nodes, 16)
+    devs = jax.devices()[: int(np.prod(shape))]
+    return jax.make_mesh(shape, ("node", "data", "model"), devices=devs), "node"

@@ -1,0 +1,53 @@
+"""Serving: batched greedy decode against a sharded KV cache / SSM state.
+
+``make_serve_step`` is what the decode input shapes (decode_32k, long_500k)
+lower in the dry-run: ONE new token per sequence against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+
+def make_serve_step(model: Model) -> Callable:
+    """(params, tokens [B,1], caches, cache_pos) -> (next_tokens [B,1], caches)."""
+
+    def serve_step(params, tokens, caches, cache_pos):
+        logits, caches = model.decode(params, tokens, caches, cache_pos)
+        next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tokens, caches
+
+    return serve_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch, caches):
+        logits, caches = model.prefill(params, batch, caches)
+        next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tokens, caches
+
+    return prefill_step
+
+
+def generate(model: Model, params, prompt_tokens, max_new: int, max_len: int):
+    """Host-loop generation (examples/serving demo)."""
+    b, s = prompt_tokens.shape
+    caches = model.init_cache(b, max_len)
+    serve_step = jax.jit(make_serve_step(model))
+    if model.prefill is not None:
+        logits, caches = model.prefill(params, {"tokens": prompt_tokens}, caches)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    else:  # encdec and others: feed prompt token-by-token
+        tok = prompt_tokens[:, :1]
+        for i in range(s):
+            tok, caches = serve_step(params, prompt_tokens[:, i:i + 1],
+                                     caches, jnp.int32(i))
+    out = [tok]
+    for i in range(max_new - 1):
+        tok, caches = serve_step(params, tok, caches, jnp.int32(s + i))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

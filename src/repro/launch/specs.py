@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(architecture × input-shape) pair — the dry-run's contract.
+
+No device allocation happens here: everything is jax.ShapeDtypeStruct with a
+NamedSharding attached, exactly the pattern the dry-run lowers against.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeConfig, adapt_for_shape
+from repro.configs.base import ModelConfig
+from repro.models import Model, build_model
+
+
+def batch_axes(mesh: Mesh, profile: str = "default"):
+    """Mesh axes usable for batch sharding (pod folds into data).
+
+    profile "dp": the model axis joins the batch axes — used when a model is
+    too small to amortize tensor parallelism (collective-bound roofline)."""
+    base = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if profile == "dp":
+        return base + ("model",)
+    return base
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim > 0
+
+
+def sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                profile: str = "default"):
+    """Training / prefill batch stand-ins."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes(mesh, profile)
+    bspec = ba if _div(b, mesh, ba) else (ba[-1] if _div(b, mesh, ba[-1:]) else None)
+    out = {
+        "tokens": sds((b, s), jnp.int32, mesh, P(bspec, None)),
+        "labels": sds((b, s), jnp.int32, mesh, P(bspec, None)),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((b, cfg.n_patches, cfg.frontend_dim),
+                                  jnp.float32, mesh, P(bspec, None, None))
+    if cfg.is_encdec:
+        out["frames"] = sds((b, cfg.enc_seq_len, cfg.frontend_dim),
+                            jnp.float32, mesh, P(bspec, None, None))
+        del out["tokens"]
+        out["tokens"] = sds((b, s), jnp.int32, mesh, P(bspec, None))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                profile: str = "default"):
+    """Decode-state stand-ins, sharded to fit: batch→data axes; kv_heads→model
+    when divisible, else head_dim→model; SSM heads→model; long-context
+    (unshardable batch=1) shards the cache sequence axis over data instead."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s += cfg.n_patches  # prefill writes patch+text K/V into the cache
+    ba = batch_axes(mesh, profile)
+    bspec = ba if _div(b, mesh, ba) else (ba[-1] if _div(b, mesh, ba[-1:]) else None)
+    seq_spec = None
+    if bspec is None and _div(s, mesh, ba):
+        seq_spec = ba  # sequence-sharded decode (long_500k)
+    kv_spec, hd_spec = None, None
+    if profile != "dp" and _div(cfg.n_kv_heads, mesh, "model"):
+        kv_spec = "model"
+    elif profile != "dp" and _div(cfg.head_dim, mesh, "model"):
+        hd_spec = "model"
+    L = cfg.n_layers
+
+    out = {}
+    if cfg.family != "ssm":
+        kv_shape = (L, b, s, cfg.n_kv_heads, cfg.head_dim)
+        spec = P(None, bspec, seq_spec, kv_spec, hd_spec)
+        dt = jnp.dtype(cfg.compute_dtype)
+        out["k"] = sds(kv_shape, dt, mesh, spec)
+        out["v"] = sds(kv_shape, dt, mesh, spec)
+    if cfg.family in ("ssm", "hybrid"):
+        di, h = cfg.d_inner, cfg.n_ssm_heads
+        pdim = di // h
+        g, n = cfg.ssm_groups, cfg.ssm_state
+        h_spec = "model" if profile != "dp" and _div(h, mesh, "model") else None
+        out["ssd"] = sds((L, b, h, pdim, n), jnp.float32, mesh,
+                         P(None, bspec, h_spec, None, None))
+        conv_dim = di + 2 * g * n
+        cd_spec = "model" if profile != "dp" and _div(conv_dim, mesh, "model") else None
+        out["conv"] = sds((L, b, cfg.conv_width - 1, conv_dim),
+                          jnp.dtype(cfg.compute_dtype), mesh,
+                          P(None, bspec, None, cd_spec))
+    if cfg.is_encdec:
+        enc = sds((b, cfg.enc_seq_len, cfg.d_model), jnp.dtype(cfg.compute_dtype),
+                  mesh, P(bspec, None, None))
+        return {"self": out, "enc_out": enc}
+    return out
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       profile: str = "default"):
+    b = shape.global_batch
+    ba = batch_axes(mesh, profile)
+    bspec = ba if _div(b, mesh, ba) else (ba[-1] if _div(b, mesh, ba[-1:]) else None)
+    return sds((b, 1), jnp.int32, mesh, P(bspec, None))
+
+
+def model_for(arch_cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Model, ModelConfig]:
+    cfg = adapt_for_shape(arch_cfg, shape)
+    return build_model(cfg), cfg
+
+
+def param_shapes(model: Model):
+    """Abstract param pytree (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.key(0))

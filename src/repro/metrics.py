@@ -1,0 +1,90 @@
+"""Evaluation metrics in pure numpy (no sklearn offline): AUC via
+Mann-Whitney U, sensitivity/specificity/F1 (paper §4), Davies-Bouldin index
+(paper §4.3 embedding-quality claim), and per-class recall."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def binary_auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """Rank-based AUC (ties averaged) — equivalent to Mann-Whitney U / (n+ n-)."""
+    scores = np.asarray(scores, np.float64)
+    labels = np.asarray(labels).astype(bool)
+    n_pos, n_neg = labels.sum(), (~labels).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty(len(scores), np.float64)
+    sorted_scores = scores[order]
+    ranks[order] = np.arange(1, len(scores) + 1)
+    # average ranks over ties
+    uniq, inv, counts = np.unique(sorted_scores, return_inverse=True,
+                                  return_counts=True)
+    cum = np.cumsum(counts)
+    avg_rank = (cum - (counts - 1) / 2.0)
+    ranks[order] = avg_rank[inv]
+    u = ranks[labels].sum() - n_pos * (n_pos + 1) / 2.0
+    return float(u / (n_pos * n_neg))
+
+
+def macro_auc(probs: np.ndarray, labels: np.ndarray) -> float:
+    """One-vs-rest macro AUC for multiclass probs [N, C]."""
+    cs = [binary_auc(probs[:, c], labels == c)
+          for c in range(probs.shape[1]) if (labels == c).any()]
+    return float(np.mean(cs)) if cs else 0.5
+
+
+def confusion_stats(preds: np.ndarray, labels: np.ndarray, n_classes: int):
+    """Macro-averaged sensitivity / specificity / F1 + per-class recall."""
+    sens, spec, f1s, recalls = [], [], [], []
+    for c in range(n_classes):
+        tp = np.sum((preds == c) & (labels == c))
+        fn = np.sum((preds != c) & (labels == c))
+        fp = np.sum((preds == c) & (labels != c))
+        tn = np.sum((preds != c) & (labels != c))
+        se = tp / max(tp + fn, 1)
+        sp = tn / max(tn + fp, 1)
+        pr = tp / max(tp + fp, 1)
+        f1 = 2 * pr * se / max(pr + se, 1e-12)
+        sens.append(se); spec.append(sp); f1s.append(f1); recalls.append(se)
+    return {
+        "sensitivity": float(np.mean(sens)),
+        "specificity": float(np.mean(spec)),
+        "f1": float(np.mean(f1s)),
+        "per_class_recall": [float(r) for r in recalls],
+    }
+
+
+def accuracy(preds: np.ndarray, labels: np.ndarray) -> float:
+    return float(np.mean(preds == labels))
+
+
+def davies_bouldin(embeddings: np.ndarray, labels: np.ndarray) -> float:
+    """DBI (lower = tighter clusters) — paper reports 15% lower for swarm."""
+    embeddings = np.asarray(embeddings, np.float64)
+    classes = np.unique(labels)
+    cents, scatters = [], []
+    for c in classes:
+        e = embeddings[labels == c]
+        mu = e.mean(0)
+        cents.append(mu)
+        scatters.append(np.mean(np.linalg.norm(e - mu, axis=1)))
+    k = len(classes)
+    if k < 2:
+        return 0.0
+    cents = np.stack(cents)
+    db = 0.0
+    for i in range(k):
+        ratios = [
+            (scatters[i] + scatters[j]) / max(np.linalg.norm(cents[i] - cents[j]), 1e-12)
+            for j in range(k) if j != i
+        ]
+        db += max(ratios)
+    return float(db / k)
+
+
+def classify_report(probs: np.ndarray, labels: np.ndarray) -> dict:
+    preds = probs.argmax(-1)
+    rep = {"auc": macro_auc(probs, labels), "accuracy": accuracy(preds, labels)}
+    rep.update(confusion_stats(preds, labels, probs.shape[1]))
+    return rep

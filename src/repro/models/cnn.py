@@ -1,0 +1,107 @@
+"""The paper's own diagnostic model: DenseNet-style encoder + classifier head.
+
+Faithful to §3.3 of the paper: input images pass through **four encoder
+modules of four layers each**, pooled to a feature vector (the paper reports
+1152 features into the head), then FC(→512)+BN+ReLU, then FC(512→3)+BN with a
+sigmoid applied at the loss. TorchXRayVision's pre-trained weights are not
+available offline; we reproduce the *architecture* and treat "pre-trained"
+as a warm-start option (`init_cnn(..., pretrained_key=...)` reuses a shared
+seed across nodes — all swarm nodes start from the same backbone, exactly the
+effect pre-training has on the swarm experiment).
+
+BatchNorm note: implemented in batch-statistics mode (no running averages) to
+stay purely functional; with the paper's batch size (32) this is the standard
+train-mode behaviour. Recorded as a simplification in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+
+
+def conv2d(w, x, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm(p, x, eps=1e-5):
+    axes = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axes, keepdims=True)
+    var = jnp.var(x, axes, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def init_cnn(key, cfg: ModelConfig, *, growth=32, stem=64, n_blocks=4,
+             layers_per_block=4, feat_dim=1152, hidden=512, n_classes=3):
+    """DenseNet-lite: n_blocks dense blocks × layers_per_block conv layers."""
+    ks = iter(jax.random.split(key, 2 + n_blocks * (layers_per_block + 1) + 4))
+    params = {"stem": {"w": _conv_init(next(ks), 7, 7, 3, stem), "bn": _bn_init(stem)}}
+    c = stem
+    blocks = []
+    for b in range(n_blocks):
+        layers = []
+        for _ in range(layers_per_block):
+            layers.append({"bn": _bn_init(c), "w": _conv_init(next(ks), 3, 3, c, growth)})
+            c += growth
+        trans_out = c // 2 if b < n_blocks - 1 else feat_dim
+        blocks.append({
+            "layers": layers,
+            "trans": {"bn": _bn_init(c), "w": _conv_init(next(ks), 1, 1, c, trans_out)},
+        })
+        c = trans_out
+    params["blocks"] = blocks
+    params["head"] = {
+        "fc1": {"w": jax.random.normal(next(ks), (feat_dim, hidden)) * jnp.sqrt(2.0 / feat_dim),
+                "b": jnp.zeros((hidden,)), "bn": _bn_init(hidden)},
+        "fc2": {"w": jax.random.normal(next(ks), (hidden, n_classes)) * jnp.sqrt(2.0 / hidden),
+                "b": jnp.zeros((n_classes,)), "bn": _bn_init(n_classes)},
+    }
+    return params
+
+
+def forward_cnn(params, images, *, return_features=False):
+    """images [B,H,W,3] -> logits [B,3] (sigmoid applied at the loss)."""
+    x = conv2d(params["stem"]["w"], images, stride=2)
+    x = jax.nn.relu(batchnorm(params["stem"]["bn"], x))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for block in params["blocks"]:
+        for layer in block["layers"]:
+            h = jax.nn.relu(batchnorm(layer["bn"], x))
+            h = conv2d(layer["w"], h)
+            x = jnp.concatenate([x, h], axis=-1)  # dense connectivity
+        x = jax.nn.relu(batchnorm(block["trans"]["bn"], x))
+        x = conv2d(block["trans"]["w"], x)
+        if min(x.shape[1], x.shape[2]) >= 2:  # keep ≥1×1 for small test images
+            x = jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID") / 4.0
+    feats = jnp.mean(x, axis=(1, 2))  # global average pool -> [B, feat_dim]
+    h = params["head"]["fc1"]
+    z = feats @ h["w"] + h["b"]
+    z = jax.nn.relu(batchnorm(h["bn"], z))
+    penultimate = z
+    h = params["head"]["fc2"]
+    logits = batchnorm(h["bn"], z @ h["w"] + h["b"])
+    if return_features:
+        return logits, penultimate
+    return logits
+
+
+def bce_loss(logits, labels_onehot):
+    """Paper head uses sigmoid -> multi-label BCE over the 3 classes."""
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(labels_onehot * logp + (1 - labels_onehot) * lognp)

@@ -1,0 +1,210 @@
+"""Decoder-only LM assembly covering dense / moe / ssm / hybrid / vlm families.
+
+Layers are **stacked and scanned** (`jax.lax.scan` over a leading L axis) so
+that 60+-layer production configs lower and compile quickly for the 80-way
+dry-run matrix. Mixed per-layer attention windows (sliding-window layers with
+periodic full-attention layers, à la Hymba) are carried as a scanned int array.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import attention, init_attention, make_cache
+from repro.models.layers import (
+    dtype_of, embed, init_embedding, init_mlp, init_norm, mlp, rmsnorm, unembed,
+    init_linear, linear,
+)
+from repro.models.moe import init_moe, moe
+from repro.models.ssm import init_ssm, make_ssm_state, ssm_block
+from repro.sharding.rules import constrain_block_params, logical_shard
+
+
+# ---------------------------------------------------------------------------
+# per-layer block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    fam = cfg.family
+    if fam == "ssm":
+        return {"ssm_norm": init_norm(cfg.d_model, cfg), "ssm": init_ssm(ks[0], cfg)}
+    p = {
+        "attn_norm": init_norm(cfg.d_model, cfg),
+        "attn": init_attention(ks[0], cfg),
+        "mlp_norm": init_norm(cfg.d_model, cfg),
+    }
+    if fam == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    if fam == "hybrid":
+        # Hymba-style parallel heads: attn ∥ ssm within the same block,
+        # combined with learnable per-branch output scales (β).
+        p["ssm"] = init_ssm(ks[2], cfg)
+        p["beta_attn"] = jnp.ones((cfg.d_model,), dtype_of(cfg.param_dtype))
+        p["beta_ssm"] = jnp.ones((cfg.d_model,), dtype_of(cfg.param_dtype))
+    return p
+
+
+def block_apply(p, x, cfg: ModelConfig, *, positions, window, cache, cache_pos):
+    """One residual block. cache is {} (train/prefill) or the layer's state."""
+    aux = jnp.float32(0.0)
+    new_cache = {}
+    has_cache = bool(cache)
+    fam = cfg.family
+
+    if fam == "ssm":
+        h = rmsnorm(p["ssm_norm"], x, cfg.norm_eps)
+        y, st = ssm_block(p["ssm"], h, cfg,
+                          state={"ssd": cache["ssd"], "conv": cache["conv"]} if has_cache else None)
+        if has_cache:
+            new_cache = st
+        return x + y, aux, new_cache
+
+    h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    kv_cache = {"k": cache["k"], "v": cache["v"]} if has_cache else None
+    a, kv = attention(p["attn"], h, cfg, positions=positions, window=window,
+                      cache=kv_cache, cache_pos=cache_pos)
+    if fam == "hybrid":
+        s, st = ssm_block(p["ssm"], h, cfg,
+                          state={"ssd": cache["ssd"], "conv": cache["conv"]} if has_cache else None)
+        mix = 0.5 * (a * p["beta_attn"].astype(a.dtype)
+                     + s * p["beta_ssm"].astype(a.dtype))
+        x = x + mix
+        if has_cache:
+            new_cache = dict(st)
+    else:
+        x = x + a
+    if has_cache:
+        new_cache.update(kv)
+
+    h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if fam == "moe":
+        y, aux = moe(p["moe"], h, cfg)
+    else:
+        y = mlp(p["mlp"], h, cfg)
+    return x + y, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full attention)."""
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    if cfg.sliding_window and cfg.attn_every:
+        w[:: cfg.attn_every] = 0  # periodic global-attention layers
+    return w
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    emb_key = "embed_tied" if cfg.tie_embeddings else "embed"
+    params = {
+        emb_key: init_embedding(ks[1], cfg.padded_vocab, cfg.d_model, cfg),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(lkeys),
+        "final_norm": init_norm(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": init_linear(ks[2], cfg.d_model, cfg.padded_vocab, cfg, bias=False)["w"]}
+    if cfg.frontend_dim:  # vlm projector (frontend itself is a stub)
+        pk = jax.random.split(ks[3], 2)
+        params["projector"] = {
+            "fc1": init_linear(pk[0], cfg.frontend_dim, cfg.d_model, cfg, bias=True),
+            "fc2": init_linear(pk[1], cfg.d_model, cfg.d_model, cfg, bias=True),
+        }
+    return params
+
+
+def make_lm_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked [L, ...] decode state for scan-over-layers."""
+    dtype = dtype_of(cfg.compute_dtype)
+
+    def one(_):
+        c = {}
+        if cfg.family != "ssm":
+            c.update(make_cache(cfg, batch, max_len, dtype))
+        if cfg.family in ("ssm", "hybrid"):
+            c.update(make_ssm_state(cfg, batch, dtype))
+        return c
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def project_frontend(params, cfg: ModelConfig, feats):
+    """VLM/audio stub embeddings -> d_model via 2-layer MLP projector."""
+    h = jax.nn.gelu(linear(params["projector"]["fc1"], feats))
+    return linear(params["projector"]["fc2"], h)
+
+
+def forward_lm(
+    params,
+    cfg: ModelConfig,
+    tokens=None,            # [B,S] int32
+    *,
+    embeds=None,            # [B,S,D] pre-embedded (vlm prefix path)
+    caches=None,            # stacked decode state or None
+    cache_pos=None,         # scalar int32 write offset (decode)
+    remat: bool = False,
+):
+    """Returns (logits [B,S,V], aux scalar, new_caches)."""
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    emb_p = params["embed_tied"] if cfg.tie_embeddings else params["embed"]
+    if embeds is None:
+        x = embed(emb_p, tokens, compute_dtype)
+    else:
+        x = embeds.astype(compute_dtype)
+    b, s = x.shape[:2]
+    if cache_pos is not None:
+        positions = cache_pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    x = logical_shard(x, "batch", "res_seq", "embed")
+
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, inp):
+        h, aux = carry
+        lp, win, cache = inp
+        # pinning layer params here makes their scan-accumulated GRADIENTS
+        # inherit the same sharding (w_s_c transposes to the cotangent)
+        lp = constrain_block_params(lp)
+        h, aux_i, new_cache = block_apply(
+            lp, h, cfg, positions=positions, window=win,
+            cache=cache, cache_pos=cache_pos)
+        # Megatron-SP residual pin: saved (remat) activations shard over the
+        # model axis via the sequence dim — 16x less live memory at TP=16
+        h = logical_shard(h, "batch", "res_seq", "embed")
+        return (h, aux + aux_i), new_cache
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["layers"], windows, caches if caches is not None else {})
+    unroll = cfg.n_layers if cfg.unroll_layers else 1
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)), xs,
+                                        unroll=unroll)
+    if caches is None:
+        new_caches = None
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed_tied"], x)
+    else:
+        logits = x @ params["lm_head"]["w"].astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.padded_vocab != cfg.vocab_size:  # mask the padding columns
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.float32(-1e30).astype(logits.dtype), logits)
+    logits = logical_shard(logits, "batch", "seq", "vocab")
+    return logits, aux, new_caches

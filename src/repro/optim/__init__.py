@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401
+from repro.optim.early_stop import EarlyStopper  # noqa: F401

@@ -1,0 +1,36 @@
+"""LR schedules: cosine annealing (paper §4.1) and WSD (MiniCPM's signature
+Warmup-Stable-Decay, arXiv:2404.06395 — required by the minicpm-2b config)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def cosine_schedule(step, base_lr, warmup, total, min_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, base_lr, warmup, total, decay_frac=0.1, min_frac=0.1):
+    """Warmup → stable plateau → sharp final decay (last `decay_frac` steps)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+    decay = base_lr * (1.0 - (1.0 - min_frac) * prog)
+    lr = jnp.where(step < warmup, warm, jnp.where(step < decay_start, base_lr, decay))
+    return lr
+
+
+def make_schedule(cfg: TrainConfig):
+    if cfg.schedule == "cosine":
+        return lambda step: cosine_schedule(step, cfg.lr, cfg.warmup_steps, cfg.max_steps)
+    if cfg.schedule == "wsd":
+        return lambda step: wsd_schedule(step, cfg.lr, cfg.warmup_steps, cfg.max_steps)
+    if cfg.schedule == "const":
+        return lambda step: jnp.full((), cfg.lr, jnp.float32)
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")

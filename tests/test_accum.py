@@ -1,0 +1,31 @@
+"""Gradient accumulation (microbatching) == full-batch step, exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_config, smoke_variant
+from repro.launch.train import init_train_state, make_train_step
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("accum", [2, 4])
+def test_accum_matches_full_batch(accum):
+    cfg = smoke_variant(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params, opt = init_train_state(model, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+    }
+    full = jax.jit(make_train_step(model, TrainConfig(lr=1e-3, remat=False)))
+    micro = jax.jit(make_train_step(
+        model, TrainConfig(lr=1e-3, remat=False, accum_steps=accum)))
+    p1, _, m1 = full(params, opt, batch)
+    p2, _, m2 = micro(params, opt, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-3)

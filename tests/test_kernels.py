@@ -1,0 +1,181 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_merge import fused_merge, fused_merge_tree
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused_merge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,dtype", [
+    (2, 512, jnp.float32), (4, 1000, jnp.float32), (8, 4096, jnp.float32),
+    (4, 777, jnp.float32),          # non-multiple of block
+    (4, 2048, jnp.bfloat16),
+])
+def test_fused_merge_sweep(n, d, dtype):
+    x = jnp.asarray(RNG.normal(0, 1, (n, d))).astype(dtype)
+    w = jnp.asarray(RNG.dirichlet(np.ones(n)), jnp.float32)
+    for gate, self_idx in [(True, 0), (False, n - 1)]:
+        got = fused_merge(x, w, self_idx, gate, block=512, interpret=True)
+        want = ref.fused_merge_ref(x, w, self_idx, gate)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_fused_merge_tree():
+    tree = {"a": jnp.ones((4, 3, 5)), "b": {"c": jnp.arange(4 * 7.).reshape(4, 7)},
+            "skip": None}
+    w = jnp.asarray([0.25] * 4)
+    out = fused_merge_tree(tree, w, 1, True, block=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.ones((3, 5)), rtol=1e-6)
+    want = np.asarray(jnp.arange(4 * 7.).reshape(4, 7).mean(0))
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]), want, rtol=1e-6)
+    assert out["skip"] is None
+
+
+# property: merge with identity row == self row regardless of gate
+@pytest.mark.parametrize("seed", range(5))
+def test_fused_merge_identity_property(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 4, 513
+    x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    i = seed % n
+    w = jnp.zeros((n,), jnp.float32).at[i].set(1.0)
+    got = fused_merge(x, w, i, True, block=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x[i]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lora_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,r,dtype", [
+    (128, 256, 128, 8, jnp.float32),
+    (256, 512, 384, 16, jnp.float32),
+    (128, 1024, 256, 64, jnp.float32),
+    (256, 256, 256, 16, jnp.bfloat16),
+])
+def test_lora_matmul_sweep(m, k, n, r, dtype):
+    x = jnp.asarray(RNG.normal(0, 1, (m, k))).astype(dtype)
+    w = jnp.asarray(RNG.normal(0, 1, (k, n)) / np.sqrt(k)).astype(dtype)
+    a = jnp.asarray(RNG.normal(0, 1, (k, r)) / np.sqrt(k)).astype(dtype)
+    b = jnp.asarray(RNG.normal(0, 1, (r, n)) / np.sqrt(r)).astype(dtype)
+    got = lora_matmul(x, w, a, b, 1.5, bm=128, bn=128, bk=128, interpret=True)
+    want = ref.lora_matmul_ref(x, w, a, b, 1.5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_lora_matmul_zero_b_is_base_matmul():
+    m = k = n = 128
+    x = jnp.asarray(RNG.normal(0, 1, (m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(0, 1, (k, n)), jnp.float32)
+    a = jnp.asarray(RNG.normal(0, 1, (k, 8)), jnp.float32)
+    b = jnp.zeros((8, n), jnp.float32)
+    got = lora_matmul(x, w, a, b, 99.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,s,d,causal,window", [
+    (1, 4, 4, 128, 64, True, 0),       # MHA causal
+    (2, 4, 2, 256, 64, True, 0),       # GQA
+    (1, 8, 2, 256, 64, True, 64),      # GQA + sliding window
+    (1, 4, 1, 128, 128, True, 0),      # MQA
+    (2, 2, 2, 128, 64, False, 0),      # bidirectional (encoder)
+])
+def test_flash_attention_sweep(b, h, hkv, s, d, causal, window):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    b, h, s, d = 1, 2, 128, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, d))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, d))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_flash_window_equals_masked_full(seed):
+    """Sliding window == full attention when window >= seq (property)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64)), jnp.float32)
+    a = flash_attention(q, k, v, window=128, bq=64, bk=64, interpret=True)
+    b = flash_attention(q, k, v, window=0, bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 32, 16, 16),
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 4, 64, 128, 64),   # mamba2-370m-like state size
+    (2, 96, 2, 32, 8, 32),      # seq not a multiple of 64
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    x = jnp.asarray(RNG.normal(0, 1, (b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(0.1, 0.05, (b, s, h))), jnp.float32)
+    alog = jnp.asarray(np.log(np.linspace(1, 8, h)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, n)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, n)), jnp.float32)
+    yk, stk = ssd_scan(x, dt, alog, bm, cm, chunk=chunk, interpret=True)
+    yr, str_ = ref.ssd_scan_ref(x, dt, alog, bm, cm)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(stk), np.asarray(str_),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_model_module():
+    """Kernel == the model's chunked jnp implementation (same math, two paths)."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 1, 128, 2, 32, 16
+    x = jnp.asarray(RNG.normal(0, 1, (b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(0.1, 0.05, (b, s, h))), jnp.float32)
+    alog = jnp.asarray(np.log(np.linspace(1, 4, h)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(0, 0.5, (b, s, 1, n)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(0, 0.5, (b, s, 1, n)), jnp.float32)
+    ym, stm = ssd_chunked(x, dt, alog, bm, cm, chunk=32)
+    bmh = jnp.repeat(bm, h, axis=2)
+    cmh = jnp.repeat(cm, h, axis=2)
+    yk, stk = ssd_scan(x, dt, alog, bmh, cmh, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ym), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(stk), np.asarray(stm), rtol=1e-4, atol=1e-4)

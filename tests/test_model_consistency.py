@@ -1,0 +1,115 @@
+"""Cross-path consistency: model modules vs kernels vs hand oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.models.attention import attention, init_attention
+from repro.models.moe import init_moe, moe
+from repro.models.transformer import layer_windows
+
+
+def test_module_attention_matches_flash_kernel():
+    """The jnp attention module (dry-run path) == the Pallas flash kernel."""
+    from repro.kernels.flash_attention import flash_attention
+    cfg = ModelConfig(name="t", d_model=128, n_heads=4, n_kv_heads=2,
+                      head_dim=32, vocab_size=10, rope_theta=1e4)
+    key = jax.random.key(0)
+    p = init_attention(key, cfg)
+    b, s = 2, 128
+    x = jax.random.normal(jax.random.key(1), (b, s, 128), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    for window in (0, 32):
+        y_mod, _ = attention(p, x, cfg, positions=positions, window=window)
+        # rebuild q/k/v exactly as the module does, run the kernel on them
+        from repro.models.layers import linear, apply_rope
+        q = apply_rope(linear(p["q"], x).reshape(b, s, 4, 32), positions, 1e4)
+        k = apply_rope(linear(p["k"], x).reshape(b, s, 2, 32), positions, 1e4)
+        v = linear(p["v"], x).reshape(b, s, 2, 32)
+        out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=True,
+                              window=window, bq=64, bk=64, interpret=True)
+        y_kern = linear(p["o"], out.transpose(0, 2, 1, 3).reshape(b, s, -1))
+        np.testing.assert_allclose(np.asarray(y_mod), np.asarray(y_kern),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_vocab_padding_masked_and_argmax_valid():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=64, n_heads=2,
+                      n_kv_heads=2, d_ff=128, vocab_size=100, vocab_pad_to=64)
+    assert cfg.padded_vocab == 128
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    from repro.models.transformer import forward_lm
+    logits, _, _ = forward_lm(params, cfg, jnp.ones((1, 8), jnp.int32))
+    assert logits.shape[-1] == 128
+    pad = np.asarray(logits[..., 100:])
+    assert (pad < -1e29).all(), "padding columns must be masked"
+    assert int(jnp.argmax(logits, -1).max()) < 100
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_moe_matches_dense_expert_oracle(seed):
+    """Top-1 routing with ample capacity == manually routing every token."""
+    cfg = ModelConfig(name="t", family="moe", d_model=32, n_experts=4,
+                      top_k=1, d_ff_expert=64, capacity_factor=8.0,
+                      vocab_size=10, router_aux_coef=0.0)
+    p = init_moe(jax.random.key(seed), cfg)
+    x = jax.random.normal(jax.random.key(seed + 10), (2, 16, 32), jnp.float32)
+    y, aux = moe(p, x, cfg)
+
+    # oracle: per-token argmax expert, run its FFN densely
+    logits = x.reshape(-1, 32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    eid = jnp.argmax(probs, -1)
+    xt = x.reshape(-1, 32)
+    outs = []
+    for t in range(xt.shape[0]):
+        e = int(eid[t])
+        h = jax.nn.silu(xt[t] @ p["experts"]["gate"]["w"][e]) * (
+            xt[t] @ p["experts"]["up"]["w"][e])
+        outs.append(h @ p["experts"]["down"]["w"][e])
+    want = jnp.stack(outs).reshape(2, 16, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    """Tiny capacity: output stays finite and dropped tokens contribute 0."""
+    cfg = ModelConfig(name="t", family="moe", d_model=16, n_experts=2,
+                      top_k=2, d_ff_expert=32, capacity_factor=0.1,
+                      vocab_size=10)
+    p = init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 32, 16), jnp.float32)
+    y, aux = moe(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(float(aux))
+    # with cf=8 nothing drops; outputs must differ (capacity actually binds)
+    y_full, _ = moe(p, x, cfg.replace(capacity_factor=8.0))
+    assert float(jnp.abs(y - y_full).max()) > 1e-6
+
+
+def test_layer_windows_patterns():
+    cfg = ModelConfig(name="t", n_layers=8, sliding_window=128, attn_every=4,
+                      n_heads=2, n_kv_heads=2, vocab_size=10)
+    w = layer_windows(cfg)
+    assert list(w) == [0, 128, 128, 128, 0, 128, 128, 128]
+    cfg2 = cfg.replace(attn_every=0)
+    assert (layer_windows(cfg2) == 128).all()
+    cfg3 = cfg.replace(sliding_window=0)
+    assert (layer_windows(cfg3) == 0).all()
+
+
+def test_gqa_grouping_math():
+    """GQA with g groups == full MHA when KV heads are replicated g times."""
+    from repro.kernels.ref import attention_ref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 32, 16)), jnp.float32)
+    kv = jnp.asarray(rng.normal(0, 1, (1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 32, 16)), jnp.float32)
+    gqa = attention_ref(q, kv, v)
+    mha = attention_ref(q, jnp.repeat(kv, 2, 1), jnp.repeat(v, 2, 1))
+    np.testing.assert_allclose(np.asarray(gqa), np.asarray(mha), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,218 @@
+"""Substrate tests: optimizer, schedules, early stopping, data pipeline,
+metrics, checkpointing, LoRA."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.lora import (inject_lora, merge_lora_into_base, payload_bytes,
+                             split_adapters, combine)
+from repro.checkpointing import load_pytree, save_pytree, load_metadata
+from repro.data import (batches, dirichlet_shards, make_histo_dataset,
+                        make_lm_stream, paper_splits, shard_to_nodes)
+from repro.metrics import (binary_auc, classify_report, davies_bouldin,
+                           macro_auc)
+from repro.models import build_model
+from repro.optim import (EarlyStopper, adamw_init, adamw_update,
+                         clip_by_global_norm, global_norm, make_schedule)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    tc = TrainConfig(lr=0.1, weight_decay=0.0, grad_clip=0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"x": 2 * params["x"]}
+        params, state = adamw_update(params, grads, state, tc, 0.1)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks_params():
+    tc = TrainConfig(lr=0.1, weight_decay=0.5, grad_clip=0)
+    params = {"x": jnp.asarray([10.0])}
+    state = adamw_init(params)
+    params, _ = adamw_update(params, {"x": jnp.zeros(1)}, state, tc, 0.1)
+    assert float(params["x"][0]) < 10.0
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["cosine", "wsd", "const"])
+def test_schedules_shape(kind):
+    tc = TrainConfig(lr=1e-3, warmup_steps=10, max_steps=100, schedule=kind)
+    sched = make_schedule(tc)
+    lrs = np.asarray([float(sched(s)) for s in range(100)])
+    if kind != "const":
+        assert lrs[0] < lrs[9]                 # warmup rises
+    assert lrs.max() <= 1e-3 + 1e-9
+    if kind == "cosine":
+        assert lrs[-1] < lrs[50] < lrs[11]     # monotone decay after warmup
+    if kind == "wsd":
+        stable = lrs[15:85]
+        assert np.allclose(stable, 1e-3)       # plateau
+        assert lrs[-1] < 1e-3 * 0.95           # final decay kicks in
+
+
+def test_early_stopper_patience():
+    es = EarlyStopper(patience=3, mode="max")
+    assert not es.update(0.5)
+    assert not es.update(0.6)
+    for m in (0.55, 0.58, 0.59):
+        stopped = es.update(m)
+    assert stopped and es.best == 0.6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_paper_splits():
+    assert paper_splits(10_000) == [1000, 3000, 3000, 3000]
+
+
+def test_shard_to_nodes_disjoint_and_sized():
+    x, y = make_histo_dataset(500, size=8, seed=0)
+    shards = shard_to_nodes(x, y, paper_splits(500), seed=1)
+    assert [len(s[1]) for s in shards] == [50, 150, 150, 150]
+    # disjoint: total class counts match
+    all_y = np.concatenate([s[1] for s in shards])
+    assert len(all_y) == 500
+
+
+def test_class_bias_sharding_skews_distribution():
+    x, y = make_histo_dataset(900, size=8, seed=0)
+    shards = shard_to_nodes(x, y, [300, 300, 300], seed=1,
+                            class_bias=[[10, 1, 1], [1, 10, 1], [1, 1, 10]])
+    for i, (_, sy) in enumerate(shards):
+        counts = np.bincount(sy, minlength=3)
+        assert counts.argmax() == i
+
+
+def test_dirichlet_shards_partition():
+    x, y = make_histo_dataset(400, size=8, seed=0)
+    shards = dirichlet_shards(x, y, 4, alpha=0.5, seed=0)
+    assert sum(len(s[1]) for s in shards) == 400
+
+
+def test_batches_and_augment_shapes():
+    x, y = make_histo_dataset(100, size=16, seed=0)
+    rng = np.random.default_rng(0)
+    bs = list(batches(x, y, 16, rng))
+    assert len(bs) == 6
+    assert bs[0][0].shape == (16, 16, 16, 3)
+
+
+def test_lm_stream_labels_shifted():
+    d = make_lm_stream(4, 32, 100, seed=0)
+    np.testing.assert_array_equal(d["tokens"][:, 1:], d["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_auc_known_values():
+    assert binary_auc(np.array([0.1, 0.9]), np.array([0, 1])) == 1.0
+    assert binary_auc(np.array([0.9, 0.1]), np.array([0, 1])) == 0.0
+    assert binary_auc(np.array([0.5, 0.5]), np.array([0, 1])) == 0.5
+
+
+def test_macro_auc_perfect():
+    probs = np.eye(3)[np.array([0, 1, 2, 0, 1, 2])] * 0.8 + 0.1
+    labels = np.array([0, 1, 2, 0, 1, 2])
+    assert macro_auc(probs, labels) == 1.0
+
+
+def test_davies_bouldin_orders_cluster_quality():
+    rng = np.random.default_rng(0)
+    labels = np.repeat([0, 1, 2], 50)
+    centers = np.eye(3) * 10
+    tight = centers[labels] + rng.normal(0, 0.1, (150, 3))
+    loose = centers[labels] + rng.normal(0, 3.0, (150, 3))
+    assert davies_bouldin(tight, labels) < davies_bouldin(loose, labels)
+
+
+def test_classify_report_keys():
+    rng = np.random.default_rng(0)
+    probs = rng.dirichlet(np.ones(3), 100)
+    labels = rng.integers(0, 3, 100)
+    rep = classify_report(probs, labels)
+    for k in ("auc", "accuracy", "sensitivity", "specificity", "f1",
+              "per_class_recall"):
+        assert k in rep
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=100)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    path = os.path.join(tmp_path, "node0.msgpack")
+    save_pytree(path, params, metadata={"step": 42, "arch": "t"})
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored = load_pytree(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert load_metadata(path)["step"] == 42
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "x.msgpack")
+    save_pytree(path, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        load_pytree(path, {"a": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------------------------
+# LoRA
+# ---------------------------------------------------------------------------
+
+def test_lora_identity_at_init_and_mergeable():
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=100)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    lp = inject_lora(params, jax.random.key(1), rank=4)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    l0 = float(model.loss_fn(params, batch, remat=False)[0])
+    l1 = float(model.loss_fn(lp, batch, remat=False)[0])
+    assert abs(l0 - l1) < 1e-5
+    l2 = float(model.loss_fn(merge_lora_into_base(lp), batch, remat=False)[0])
+    assert abs(l0 - l2) < 1e-4
+
+
+def test_lora_payload_fraction_small():
+    cfg = ModelConfig(name="t", n_layers=4, d_model=256, n_heads=4,
+                      n_kv_heads=4, d_ff=1024, vocab_size=5000)
+    model = build_model(cfg)
+    lp = inject_lora(model.init(jax.random.key(0)), jax.random.key(1), rank=8)
+    frac = payload_bytes(lp, True) / payload_bytes(lp, False)
+    assert frac < 0.10  # the paper's communication-efficiency claim
+
+
+def test_split_combine_inverse():
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab_size=100)
+    model = build_model(cfg)
+    lp = inject_lora(model.init(jax.random.key(0)), jax.random.key(1), rank=4)
+    ad, base = split_adapters(lp)
+    rt = combine(ad, base)
+    for a, b in zip(jax.tree.leaves(lp), jax.tree.leaves(rt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
