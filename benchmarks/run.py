@@ -13,6 +13,7 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
   lora_payload      §3.2 LoRA-only sync payload vs full-model payload
   gossip_spectrum   consensus rate (spectral gap) per topology
   sync_roundtrip    host-sim 4-node sync wall time (propose+gate+commit)
+  engine_roundtrip  jitted stacked engine round (local steps + gated sync)
 
 Full protocol runs live in examples/histopathology_swarm.py; these benchmarks
 use a reduced-but-faithful configuration (and reuse cached full results from
@@ -32,7 +33,9 @@ RESULT_DIR = "experiments/histo"
 
 
 def _time_us(fn, *args, reps=20):
-    fn(*args)  # compile
+    # block BEFORE t0 so compile + the warmup's async dispatch don't leak
+    # into the timed region; block after so the queue is drained at t1.
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -122,6 +125,14 @@ def merge_kernel():
     got = fused_merge(x, w, 0, True, interpret=True)
     err = float(jnp.max(jnp.abs(got - ref_jit())))
     print(f"merge_fused_pallas_validated,0,maxerr={err:.2e}")
+    # all-nodes form (the engine's commit): one launch for every node's row
+    from repro.kernels.fused_merge import fused_merge_all
+    Wm = jnp.tile(w[None, :], (n, 1))
+    gates = jnp.asarray([1, 0, 1, 1], jnp.int32)
+    got_all = fused_merge_all(x, Wm, gates, interpret=True)
+    want_all = jnp.where(gates[:, None].astype(bool), Wm @ x, x)
+    err = float(jnp.max(jnp.abs(got_all - want_all)))
+    print(f"merge_fused_all_nodes_validated,0,maxerr={err:.2e}")
     # derived: HBM-roofline time for the fused pass on TPU v5e
     bytes_moved = (n + 1) * d * 4
     print(f"merge_fused_v5e_roofline_us,0,{bytes_moved / 819e9 * 1e6:.1f}")
@@ -167,6 +178,7 @@ def sync_roundtrip():
         SwarmConfig(n_nodes=4, sync_every=1, lora_only=False, topology="full"),
         train_step_fn=lambda p, o, b, s: (p, o, {}),
         eval_fn=lambda p, v: 1.0, nodes=nodes)
+    sw.sync([1, 1, 1, 1])  # compile the jitted propose/commit outside timing
     t0 = time.perf_counter()
     reps = 10
     for _ in range(reps):
@@ -175,9 +187,43 @@ def sync_roundtrip():
     print(f"sync_roundtrip_4node_host,{us:.1f},propose+gate+commit")
 
 
+def engine_roundtrip():
+    """The jitted stacked engine: sync_every local steps + propose + gate +
+    fused commit as ONE compiled call (vs sync_roundtrip's host-driven sync)."""
+    from repro.configs.base import SwarmConfig
+    from repro.core.engine import SwarmEngine
+    rng = np.random.default_rng(0)
+    n, t = 4, 4
+    params = {"w": jnp.asarray(rng.normal(0, 1, (n, 64, 64)), jnp.float32)}
+    opt = {"m": jnp.zeros_like(params["w"])}
+
+    def train_step(p, o, b, s):
+        g = p["w"] * 1e-3
+        return {"w": p["w"] - g}, {"m": o["m"] + g}, {"loss": jnp.sum(g * g)}
+
+    def eval_fn(p, v):
+        return 1.0 - 0.0 * jnp.sum(p["w"])  # always accept, stays in-graph
+
+    eng = SwarmEngine(
+        SwarmConfig(n_nodes=n, sync_every=t, lora_only=False, topology="full"),
+        train_step, eval_fn)
+    batches = jnp.zeros((t, n, 1))
+    val = jnp.zeros((n, 1))
+    state = {"p": params, "o": opt}
+
+    def once():  # buffers are donated, so thread the state through
+        p, o, _ = eng.round(state["p"], state["o"], batches, val, None, 0)
+        state["p"], state["o"] = p, o
+        return p["w"]
+
+    us = _time_us(once)
+    print(f"engine_round_4node_{t}steps,{us:.1f},"
+          f"jitted local+propose+gate+fused_commit")
+
+
 ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
-       sync_roundtrip]
+       sync_roundtrip, engine_roundtrip]
 
 
 def roofline_table():

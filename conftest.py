@@ -1,0 +1,18 @@
+"""Shared pytest config: bound XLA compile time on the CPU-only test runner.
+
+Tier-1 is compile-bound — dozens of jitted programs (per-arch smoke tests,
+the swarm engine, SPMD subprocesses) on a small CPU runner — and XLA's CPU
+backend spends most of that wall time in optimization passes that don't
+matter for tiny test shapes. Backend optimization level 0 halves compile
+time; numerics are unchanged (all tests keep their original tolerances).
+Set XLA_FLAGS with an explicit --xla_backend_optimization_level to override.
+
+This file must run before the first `import jax` (pytest imports conftest
+first), because XLA_FLAGS is read at backend initialization.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_backend_optimization_level" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_backend_optimization_level=0").strip()

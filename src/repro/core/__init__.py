@@ -1,4 +1,7 @@
 """P2P Swarm Learning core — the paper's contribution as a composable module."""
+from repro.core.engine import (  # noqa: F401
+    SwarmEngine, active_weights, host_commit,
+)
 from repro.core.merge_impl import (  # noqa: F401
     fisher_merge, gradmatch_merge, merge, mix, stack_params, unstack_params,
 )

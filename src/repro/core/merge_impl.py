@@ -36,13 +36,15 @@ def mix(stacked, W):
     """Apply mixing matrix: θ_i ← Σ_j W[i,j] θ_j  (the gossip round).
 
     W: [N, N] row-stochastic (jnp or np). Leaf dtype is preserved; the
-    contraction runs in fp32 for merge stability.
+    contraction runs in fp32 at HIGHEST precision so accelerator backends
+    don't drop to bf16 passes (on TPU the default matmul precision would
+    cost ~3 decimal digits on every merge).
     """
     Wj = jnp.asarray(W, jnp.float32)
 
     def one(x):
         flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
-        out = Wj @ flat
+        out = jax.lax.dot(Wj, flat, precision=jax.lax.Precision.HIGHEST)
         return out.reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(one, stacked)

@@ -7,15 +7,21 @@ The paper's loop (§3.1):
   4. each node ACCEPTS the merge only if a local validation check clears the
      80% threshold; otherwise it keeps its own params (autonomy).
 
-``SwarmLearner`` is the host-simulated N-node swarm used by the paper
-reproduction (CNN, 4 nodes) and by the multi-arch examples on CPU.
-The SPMD production path uses the same ``propose_merge``/``gated_commit``
-pure functions with `repro.core.gossip` collectives (see launch/train.py).
+``SwarmLearner`` is the host-simulated N-node swarm that accepts **arbitrary
+Python** ``train_step_fn``/``eval_fn`` callables (multi-arch examples, tests).
+Its merge math delegates to `repro.core.engine`: propose runs as one jitted
+program and the commit goes through the fused Pallas merge kernel — only the
+user eval calls stay on the host.
+
+Fully-traceable workloads (the paper repro in `experiments/histo`, the CLI
+swarm path, benchmarks) should use `repro.core.engine.SwarmEngine` directly:
+it compiles the whole round — local steps, in-graph validation, gate, fused
+commit — into a single `jax.jit` with donated buffers.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,60 +29,15 @@ import numpy as np
 
 from repro.configs.base import SwarmConfig
 import repro.core.topology as topo
+from repro.core import engine as engine_lib
 from repro.core import merge_impl as merge_lib
-from repro.core.lora import combine, split_adapters
+from repro.core.engine import (  # noqa: F401  (re-exported public API)
+    active_weights, gate_decisions, gated_commit, mixing_matrix, propose_merge,
+)
 
 
 # ---------------------------------------------------------------------------
-# pure building blocks (shared by host-sim and SPMD paths)
-# ---------------------------------------------------------------------------
-
-def mixing_matrix(cfg: SwarmConfig, data_sizes: Sequence[float],
-                  active: Optional[Sequence[bool]] = None) -> np.ndarray:
-    weights = topo.fedavg_weights(data_sizes) if cfg.merge == "fedavg" else None
-    return topo.build_matrix(cfg.topology, cfg.n_nodes,
-                             weights=weights, self_weight=cfg.self_weight,
-                             active=active)
-
-
-def propose_merge(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
-    """Merge candidate for every node. Honors lora_only payload selection."""
-    if cfg.lora_only:
-        adapters, base = split_adapters(stacked)
-        merged_adapters = merge_lib.merge(
-            adapters, cfg.merge if cfg.merge in ("fisher", "gradmatch") else "fedavg",
-            W=W, fishers=split_adapters(fishers)[0] if fishers is not None else None,
-            weights=weights)
-        return combine(merged_adapters, base)
-    method = cfg.merge if cfg.merge in ("fisher", "gradmatch") else "fedavg"
-    return merge_lib.merge(stacked, method, W=W, fishers=fishers, weights=weights)
-
-
-def gate_decisions(metric_merged, metric_local, threshold: float,
-                   mode: str = "relative"):
-    """Per-node accept bits. `relative`: merged ≥ thr × local (robust default);
-    `absolute`: merged ≥ thr (the paper's literal 80% reading)."""
-    m, l = jnp.asarray(metric_merged), jnp.asarray(metric_local)
-    if mode == "relative":
-        return m >= threshold * l
-    return m >= threshold
-
-
-def gated_commit(candidate, local, gates):
-    """θ_i ← gate_i ? merged_i : local_i (leading node axis)."""
-    g = jnp.asarray(gates)
-
-    def one(c, l):
-        if c is None or l is None:
-            return c if l is None else l
-        gb = g.reshape((g.shape[0],) + (1,) * (c.ndim - 1))
-        return jnp.where(gb, c, l)
-
-    return jax.tree.map(one, candidate, local, is_leaf=lambda x: x is None)
-
-
-# ---------------------------------------------------------------------------
-# host-simulated swarm (paper reproduction path)
+# host-simulated swarm (arbitrary-callable path)
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -131,12 +92,14 @@ class SwarmLearner:
         stacked = merge_lib.stack_params([n.params for n in self.nodes])
         fishers = None
         if self.cfg.merge in ("fisher", "gradmatch"):
-            fishers = merge_lib.stack_params(
-                [n.fisher if n.fisher is not None else
-                 jax.tree.map(jnp.ones_like, n.params) for n in self.nodes])
-        weights = topo.fedavg_weights(sizes)
-        candidate = propose_merge(stacked, self.cfg, W,
-                                  fishers=fishers, weights=weights)
+            fishers = merge_lib.stack_params([
+                n.fisher if n.fisher is not None
+                else jax.tree.map(jnp.ones_like, n.params)
+                for n in self.nodes])
+            fishers = engine_lib.mask_fishers(fishers, np.asarray(active))
+        weights = active_weights(sizes, active)
+        candidate = engine_lib.propose_host(stacked, self.cfg, W,
+                                            fishers=fishers, weights=weights)
         cand_nodes = merge_lib.unstack_params(candidate, self.n)
 
         metric_local, metric_merged = [], []
@@ -152,7 +115,8 @@ class SwarmLearner:
             self.cfg.val_threshold, mode="relative"))
         gates &= np.asarray(active)
 
-        committed = gated_commit(candidate, stacked, gates)
+        committed = engine_lib.commit_host(stacked, candidate, W, gates,
+                                           self.cfg)
         for i, node in enumerate(self.nodes):
             node.params = jax.tree.map(lambda x, i=i: x[i], committed)
         log = {"step": self.step, "gates": gates.tolist(),

@@ -19,9 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig, TrainConfig
-from repro.core.swarm import NodeState, SwarmLearner
-from repro.data import batches, make_histo_dataset, paper_splits, shard_to_nodes
-from repro.metrics import classify_report, davies_bouldin
+from repro.core import merge_impl as merge_lib
+from repro.core.engine import SwarmEngine
+from repro.data import (augment, batches, make_histo_dataset, paper_splits,
+                        shard_to_nodes)
+from repro.metrics import classify_report, davies_bouldin, macro_auc_traced
 from repro.models.cnn import bce_loss, forward_cnn, init_cnn
 from repro.optim import EarlyStopper, adamw_init, adamw_update, make_schedule
 
@@ -49,6 +51,8 @@ class HistoExperimentConfig:
     stem: int = 16
     feat_dim: int = 96
     hidden: int = 32
+    n_blocks: int = 4           # paper: 4 encoder modules × 4 layers; tests
+    layers_per_block: int = 4   # shrink these to bound XLA compile time
 
 
 def _make_model_fns(ecfg: HistoExperimentConfig):
@@ -81,47 +85,111 @@ def _make_model_fns(ecfg: HistoExperimentConfig):
 
 def _init_params(ecfg, key):
     return init_cnn(key, None, growth=ecfg.growth, stem=ecfg.stem,
-                    feat_dim=ecfg.feat_dim, hidden=ecfg.hidden)
+                    feat_dim=ecfg.feat_dim, hidden=ecfg.hidden,
+                    n_blocks=ecfg.n_blocks,
+                    layers_per_block=ecfg.layers_per_block)
 
 
-def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
-    """Train nodes (swarm if swarm_cfg else isolated). Returns node params."""
-    key = jax.random.key(ecfg.seed + 42)   # shared init = warm-start effect
-    _, predict, _ = _make_model_fns(ecfg)
+def _batch_stream(ecfg, trains):
+    """Precompute the per-node minibatch stream as stacked arrays.
 
-    def eval_fn(params, val):
-        x, y = val
-        return classify_report(np.asarray(predict(params, x)), y)["auc"]
-
-    nodes = []
-    vals, trains = [], []
-    for i, (x, y) in enumerate(shards):
-        n_val = max(8, int(len(y) * ecfg.val_frac))
-        vals.append((x[:n_val], y[:n_val]))
-        trains.append((x[n_val:], y[n_val:]))
-        params = _init_params(ecfg, key)
-        nodes.append(NodeState(params=params, opt_state=adamw_init(params),
-                               data_size=len(y)))
-
-    cfg = swarm_cfg or SwarmConfig(n_nodes=len(shards), sync_every=10**9)
-    sw = SwarmLearner(cfg, train_step, eval_fn, nodes)
-    rngs = [np.random.default_rng(ecfg.seed * 100 + i) for i in range(len(shards))]
-    iters = [iter(()) for _ in shards]
-    for step in range(ecfg.steps):
-        bs = []
+    Returns (xs [steps, N, B, H, W, C], ys [steps, N, B]). Nodes whose shard
+    can serve a full batch keep the exact per-node epoch iterators the host
+    loop used (identical data order); a node with fewer than B samples — the
+    extreme-scarcity trials — draws B samples with replacement per step
+    instead of shrinking every other node's batch (vmap needs one B).
+    """
+    n = len(trains)
+    bs = min(ecfg.batch_size, max(len(y) for _, y in trains))
+    rngs = [np.random.default_rng(ecfg.seed * 100 + i) for i in range(n)]
+    iters = [iter(()) for _ in range(n)]
+    h = trains[0][0].shape[1]
+    xs = np.empty((ecfg.steps, n, bs, h, h, 3), np.float32)
+    ys = np.empty((ecfg.steps, n, bs), np.int32)
+    for s in range(ecfg.steps):
         for i, (x, y) in enumerate(trains):
+            if len(y) < bs:  # tiny shard: resample with replacement
+                idx = rngs[i].integers(0, len(y), bs)
+                xs[s, i], ys[s, i] = augment(x[idx], rngs[i]), y[idx]
+                continue
             try:
                 b = next(iters[i])
             except StopIteration:
-                iters[i] = batches(x, y, min(ecfg.batch_size, len(y)), rngs[i])
+                iters[i] = batches(x, y, bs, rngs[i])
                 b = next(iters[i])
-            bs.append(b)
-        sw.local_steps(bs)
-        if swarm_cfg is not None:
-            r = sw.maybe_sync(vals)
-            if r and log is not None:
-                log.append(r)
-    return [n.params for n in nodes], sw.sync_log
+            xs[s, i], ys[s, i] = b
+    return xs, ys
+
+
+def _stack_vals(vals):
+    """Pad per-node validation sets to a common length + validity mask."""
+    n = len(vals)
+    vmax = max(len(y) for _, y in vals)
+    h = vals[0][0].shape[1]
+    vx = np.zeros((n, vmax, h, h, 3), np.float32)
+    vy = np.zeros((n, vmax), np.int32)
+    vm = np.zeros((n, vmax), bool)
+    for i, (x, y) in enumerate(vals):
+        vx[i, :len(y)], vy[i, :len(y)], vm[i, :len(y)] = x, y, True
+    return jnp.asarray(vx), jnp.asarray(vy), jnp.asarray(vm)
+
+
+def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
+    """Train nodes (swarm if swarm_cfg else isolated). Returns node params.
+
+    Runs on `SwarmEngine`: the whole sync round — `sync_every` vmapped local
+    steps, in-graph AUC gate, fused Pallas commit — is one compiled program;
+    `run_rounds` scans over rounds with zero host round-trips.
+    """
+    key = jax.random.key(ecfg.seed + 42)   # shared init = warm-start effect
+    n = len(shards)
+
+    vals, trains = [], []
+    for x, y in shards:
+        n_val = max(8, int(len(y) * ecfg.val_frac))
+        vals.append((x[:n_val], y[:n_val]))
+        trains.append((x[n_val:], y[n_val:]))
+
+    params = _init_params(ecfg, key)
+    stacked = merge_lib.stack_params([params] * n)
+    opt = merge_lib.stack_params([adamw_init(params)] * n)
+    xs, ys = _batch_stream(ecfg, trains)
+    val = _stack_vals(vals)
+
+    def eval_fn(p, v):
+        x, y, m = v
+        return macro_auc_traced(jax.nn.sigmoid(forward_cnn(p, x)), y, m)
+
+    cfg = swarm_cfg or SwarmConfig(n_nodes=n, sync_every=10**9)
+    eng = SwarmEngine(cfg, train_step, eval_fn,
+                      data_sizes=[len(y) for _, y in shards])
+
+    sync_log = []
+    if swarm_cfg is None or cfg.sync_every > ecfg.steps:
+        stacked, opt, _ = eng.run_local(
+            stacked, opt, (jnp.asarray(xs), jnp.asarray(ys)), 0)
+    else:
+        t = cfg.sync_every
+        rounds = ecfg.steps // t
+        head = (jnp.asarray(xs[:rounds * t]).reshape((rounds, t) + xs.shape[1:]),
+                jnp.asarray(ys[:rounds * t]).reshape((rounds, t) + ys.shape[1:]))
+        stacked, opt, _, logs = eng.run_rounds(stacked, opt, head, val, None, 0)
+        if ecfg.steps % t:
+            stacked, opt, _ = eng.run_local(
+                stacked, opt,
+                (jnp.asarray(xs[rounds * t:]), jnp.asarray(ys[rounds * t:])),
+                rounds * t)
+        gates = np.asarray(logs["gates"])
+        ml = np.asarray(logs["metric_local"])
+        mm = np.asarray(logs["metric_merged"])
+        sync_log = [{"step": (r + 1) * t, "gates": gates[r].tolist(),
+                     "metric_local": ml[r].tolist(),
+                     "metric_merged": mm[r].tolist(),
+                     "spectral_gap": eng.spectral_gap}
+                    for r in range(rounds)]
+        if log is not None:
+            log.extend(sync_log)
+    return merge_lib.unstack_params(stacked, n), sync_log
 
 
 def run_experiment(ecfg: HistoExperimentConfig) -> dict:

@@ -7,6 +7,21 @@ fuses contraction-over-nodes and gating into ONE VMEM pass: each grid step
 streams an [N, BLOCK] tile from HBM, reduces over N on the VPU, applies the
 gate, writes BLOCK back. Memory-bound by design — (N+1)·BLOCK bytes moved per
 BLOCK produced, the roofline minimum for this op.
+
+Two entry points:
+
+  * ``fused_merge``      — one node's commit:   [N, D] → [D]
+  * ``fused_merge_all``  — the whole swarm's commit in one launch:
+                           [N, D] → [N, D] with a full mixing matrix W [N, N]
+                           and per-node gate bits. Grid order is
+                           (d-blocks, nodes) so the [N, BLOCK] input tile is
+                           fetched once per d-block and reused for all N output
+                           rows — (N + N)·BLOCK bytes per column block, still
+                           the roofline minimum.
+
+``fused_merge_tree`` maps either entry point leaf-wise over a stacked param
+pytree (2-D ``weights`` selects the all-nodes form); the host-simulated swarm
+engine commits through it.
 """
 from __future__ import annotations
 
@@ -64,13 +79,66 @@ def fused_merge(stacked, weights, self_idx, gate, *, block: int = DEFAULT_BLOCK,
     return out[:d]
 
 
+def _merge_all_kernel(x_ref, w_ref, g_ref, o_ref):
+    """x [N, B] tile (all nodes); w [1, N] mixing row of node i; g [1];
+    o [1, B] — node i's committed slice. Grid is (d-blocks, nodes)."""
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)              # [N, B]
+    w = w_ref[...].astype(jnp.float32)[0]           # [N]
+    merged = jnp.einsum("n,nb->b", w, x)
+    self_row = jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False)
+    gate = g_ref[0] != 0
+    o_ref[...] = jnp.where(gate, merged, self_row)[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_merge_all(stacked, W, gates, *, block: int = DEFAULT_BLOCK,
+                    interpret: bool = False):
+    """stacked [N, D] → committed [N, D]:  out[i] = gate[i] ? Σ_j W[i,j] θ_j : θ_i.
+
+    W: [N, N] row-stochastic mixing matrix; gates: [N] acceptance bits. The
+    node axis is the innermost grid dimension, so each [N, BLOCK] tile is
+    loaded once and serves every node's output row.
+    """
+    n, d = stacked.shape
+    block = min(block, max(128, d))
+    pad = (-d) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    dp = d + pad
+
+    out = pl.pallas_call(
+        _merge_all_kernel,
+        grid=(dp // block, n),
+        in_specs=[
+            pl.BlockSpec((n, block), lambda j, i: (0, j)),
+            pl.BlockSpec((1, n), lambda j, i: (i, 0)),
+            pl.BlockSpec((1,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda j, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), stacked.dtype),
+        interpret=interpret,
+    )(stacked, jnp.asarray(W, jnp.float32),
+      jnp.asarray(gates).astype(jnp.int32))
+    return out[:, :d]
+
+
 def fused_merge_tree(stacked_tree, weights, self_idx, gate, **kw):
-    """Apply the kernel leaf-wise over a stacked param pytree."""
+    """Apply the kernel leaf-wise over a stacked param pytree.
+
+    weights [N] + scalar gate → one node's view ([D]-shaped leaves);
+    weights [N, N] + gate [N] → the all-nodes commit (stacked leaves preserved;
+    ``self_idx`` is ignored — each row is its own self).
+    """
+    all_nodes = jnp.ndim(weights) == 2
+
     def one(x):
         if x is None:
             return None
         n = x.shape[0]
         flat = x.reshape(n, -1)
+        if all_nodes:
+            return fused_merge_all(flat, weights, gate, **kw).reshape(x.shape)
         return fused_merge(flat, weights, self_idx, gate, **kw).reshape(x.shape[1:])
 
     return jax.tree.map(one, stacked_tree, is_leaf=lambda v: v is None)

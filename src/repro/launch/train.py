@@ -7,17 +7,14 @@ plus a periodic gossip sync step built from `repro.core`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, SwarmConfig, TrainConfig
-from repro.core import gossip
-from repro.core.lora import split_adapters, combine
-from repro.core.swarm import gate_decisions, gated_commit, mixing_matrix
+from repro.configs.base import SwarmConfig, TrainConfig
+from repro.core.engine import SwarmEngine, gate_decisions, gated_commit
 from repro.models import Model
 from repro.optim import adamw_init, adamw_update, make_schedule
 
@@ -95,50 +92,21 @@ def make_swarm_train_step(model: Model, tc: TrainConfig) -> Callable:
 
 def make_swarm_sync_step(swarm_cfg: SwarmConfig, mesh, axis: str,
                          data_sizes, param_specs=None) -> Callable:
-    """Gossip sync: (stacked_params, metric_local, metric_merged_fn?) is split
-    into propose (collective merge) + commit (validation-gated select).
+    """Gossip sync: propose (collective merge) + commit (validation-gated
+    select), both delegating to the shared `SwarmEngine` gossip backend.
 
     Returns propose_fn(stacked_params) -> candidate. Ring topology uses
     ppermute (sparse P2P, the TPU-native schedule); full/fedavg uses psum;
     dynamic uses the all_gather mixing matrix with a runtime membership mask.
     """
-    weights = np.asarray(data_sizes, np.float64)
-    weights = weights / weights.sum()
+    engine = SwarmEngine(swarm_cfg, None, None, data_sizes=data_sizes,
+                         backend="gossip", mesh=mesh, axis=axis,
+                         param_specs=param_specs)
 
     def propose(stacked_params, active=None, fishers=None):
-        specs = param_specs
-        from jax.sharding import PartitionSpec as _P
-        if swarm_cfg.lora_only:
-            payload, base = split_adapters(stacked_params)
-            if specs is not None:
-                specs = split_adapters(
-                    specs, is_leaf=lambda x: isinstance(x, _P))[0]
-            if fishers is not None:
-                fishers = split_adapters(fishers)[0]
-        else:
-            payload, base = stacked_params, None
-
-        if swarm_cfg.merge == "fisher":
-            if fishers is None:
-                raise ValueError("fisher merge needs fisher estimates")
-            merged = gossip.fisher_gossip(payload, fishers, mesh, axis,
-                                          inner_specs=specs)
-        elif swarm_cfg.topology == "ring":
-            merged = gossip.ring_gossip(payload, mesh, axis,
-                                        self_weight=swarm_cfg.self_weight,
-                                        inner_specs=specs)
-        elif swarm_cfg.topology == "dynamic" or active is not None:
-            W = mixing_matrix(swarm_cfg, weights,
-                              active=active if active is not None else None)
-            merged = gossip.matrix_gossip(payload, W, mesh, axis,
-                                          inner_specs=specs)
-        else:
-            merged = gossip.fedavg_gossip(payload, weights, mesh, axis,
-                                          inner_specs=specs)
-
-        if swarm_cfg.lora_only:
-            return combine(merged, base)
-        return merged
+        candidate, _ = engine.propose(stacked_params, active=active,
+                                      fishers=fishers)
+        return candidate
 
     def commit(candidate, local_params, metric_merged, metric_local):
         gates = gate_decisions(metric_merged, metric_local,
@@ -156,12 +124,10 @@ def main():
     import argparse
     import time
 
-    import numpy as np  # noqa: F811
-
     from repro.checkpointing import save_json, save_pytree
     from repro.configs import get_config, smoke_variant
+    from repro.core import merge_impl as merge_lib
     from repro.core.lora import inject_lora
-    from repro.core.swarm import NodeState, SwarmLearner
     from repro.data import make_lm_stream
     from repro.models import build_model
     from repro.optim import EarlyStopper
@@ -196,59 +162,102 @@ def main():
     model = build_model(cfg)
     tc = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                      max_steps=args.steps, remat=False)
-    jit_step = jax.jit(make_train_step(model, tc))
+    base_step = make_train_step(model, tc)
     n_nodes = max(args.swarm_nodes, 1)
     streams = [make_lm_stream(256, args.seq, cfg.vocab_size,
                               seed=args.seed + i, topic_bias=1.0)
                for i in range(n_nodes)]
-
-    def eval_fn(params, val):
-        loss, _ = model.loss_fn(params, val, remat=False)
-        return 1.0 / (1.0 + float(loss))
-
-    def train_step(params, opt_state, batch, step):
-        return jit_step(params, opt_state, batch)
-
-    nodes = []
-    for i in range(n_nodes):
-        p = model.init(jax.random.key(args.seed))
-        if args.lora:
-            p = inject_lora(p, jax.random.key(args.seed + 1 + i), rank=8)
-        nodes.append(NodeState(params=p, opt_state=adamw_init(p),
-                               data_size=len(streams[i]["tokens"])))
-
-    scfg = SwarmConfig(n_nodes=n_nodes, sync_every=args.sync_every,
-                       topology=args.topology, merge=args.merge,
-                       lora_only=args.lora)
-    swarm = SwarmLearner(scfg, train_step, eval_fn, nodes)
     stopper = EarlyStopper(patience=5, mode="min")
     rng = np.random.default_rng(args.seed)
-    vals = [{k: jnp.asarray(v[:8]) for k, v in s.items()} for s in streams]
-
     t0 = time.time()
-    for step in range(args.steps):
-        batches = []
-        for s in streams:
+    final_step, sync_log = 0, []
+
+    if not args.swarm_nodes:  # plain single-learner training
+        jit_step = jax.jit(base_step)
+        p = model.init(jax.random.key(args.seed))
+        o = adamw_init(p)
+        s = streams[0]
+        for step in range(args.steps):
             idx = rng.integers(0, len(s["tokens"]), args.batch)
-            batches.append({k: jnp.asarray(v[idx]) for k, v in s.items()})
-        swarm.local_steps(batches)
-        if args.swarm_nodes:
-            log = swarm.maybe_sync(vals)
-            if log:
-                print(f"step {swarm.step:4d} sync gates={log['gates']}")
-        if step % 20 == 0 or step == args.steps - 1:
-            losses = [n.history[-1]["loss"] for n in swarm.nodes]
-            print(f"step {swarm.step:4d} loss={['%.3f' % l for l in losses]} "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
-            if stopper.update(float(np.mean(losses))):
-                print("early stop (patience exhausted)")
-                break
+            p, o, m = jit_step(p, o, {k: jnp.asarray(v[idx])
+                                      for k, v in s.items()})
+            final_step = step + 1
+            if step % 20 == 0 or step == args.steps - 1:
+                loss = float(m["loss"])
+                print(f"step {final_step:4d} loss={loss:.3f} "
+                      f"({(time.time()-t0)/final_step:.2f}s/step)")
+                if stopper.update(loss):
+                    print("early stop (patience exhausted)")
+                    break
+        node_params = [p]
+    else:  # P2P-SL: the jitted stacked engine, one compiled call per round
+        ps = []
+        for i in range(n_nodes):
+            p = model.init(jax.random.key(args.seed))
+            if args.lora:
+                p = inject_lora(p, jax.random.key(args.seed + 1 + i), rank=8)
+            ps.append(p)
+        stacked = merge_lib.stack_params(ps)
+        opts = merge_lib.stack_params([adamw_init(p) for p in ps])
+
+        def train_step(params, opt_state, batch, step):
+            return base_step(params, opt_state, batch)
+
+        def eval_fn(params, val):
+            loss, _ = model.loss_fn(params, val, remat=False)
+            return 1.0 / (1.0 + loss)
+
+        scfg = SwarmConfig(n_nodes=n_nodes, sync_every=args.sync_every,
+                           topology=args.topology, merge=args.merge,
+                           lora_only=args.lora)
+        engine = SwarmEngine(scfg, train_step, eval_fn,
+                             data_sizes=[len(s["tokens"]) for s in streams])
+        vals = {k: jnp.asarray(np.stack([s[k][:8] for s in streams]))
+                for k in streams[0]}
+
+        def draw(count):  # [count, N, B, S] stacked batch block
+            # one index draw per node, shared by every key — tokens and
+            # labels rows are paired within a sequence
+            idx = [rng.integers(0, len(s["tokens"]), (count, args.batch))
+                   for s in streams]
+            return {k: jnp.asarray(np.stack([s[k][i] for s, i
+                                             in zip(streams, idx)], axis=1))
+                    for k in streams[0]}
+
+        last_check = 0  # keep the old loop's every-20-steps stopper cadence
+        while final_step < args.steps:
+            t = min(max(args.sync_every, 1), args.steps - final_step)
+            block = draw(t)
+            if t == args.sync_every:  # full round: local steps + gated sync
+                stacked, opts, out = engine.round(stacked, opts, block, vals,
+                                                  None, final_step)
+                losses = np.asarray(out["train"]["loss"])[-1]
+                gates = np.asarray(out["gates"]).astype(bool).tolist()
+                sync_log.append({
+                    "step": final_step + t, "gates": gates,
+                    "metric_local": np.asarray(out["metric_local"]).tolist(),
+                    "metric_merged": np.asarray(out["metric_merged"]).tolist()})
+                extra = f" sync gates={gates}"
+            else:  # remainder steps, no sync
+                stacked, opts, tm = engine.run_local(stacked, opts, block,
+                                                     final_step)
+                losses = np.asarray(tm["loss"])[-1]
+                extra = ""
+            final_step += t
+            print(f"step {final_step:4d} loss={['%.3f' % l for l in losses]} "
+                  f"({(time.time()-t0)/final_step:.2f}s/step){extra}")
+            if final_step - last_check >= 20 or final_step >= args.steps:
+                last_check = final_step
+                if stopper.update(float(np.mean(losses))):
+                    print("early stop (patience exhausted)")
+                    break
+        node_params = merge_lib.unstack_params(stacked, n_nodes)
 
     if args.ckpt_dir:
-        for i, n in enumerate(swarm.nodes):
-            save_pytree(f"{args.ckpt_dir}/node{i}.msgpack", n.params,
-                        metadata={"arch": cfg.name, "step": swarm.step})
-        save_json(f"{args.ckpt_dir}/sync_log.json", swarm.sync_log)
+        for i, p in enumerate(node_params):
+            save_pytree(f"{args.ckpt_dir}/node{i}.msgpack", p,
+                        metadata={"arch": cfg.name, "step": final_step})
+        save_json(f"{args.ckpt_dir}/sync_log.json", sync_log)
         print(f"checkpoints -> {args.ckpt_dir}")
 
 

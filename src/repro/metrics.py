@@ -1,6 +1,10 @@
 """Evaluation metrics in pure numpy (no sklearn offline): AUC via
 Mann-Whitney U, sensitivity/specificity/F1 (paper §4), Davies-Bouldin index
-(paper §4.3 embedding-quality claim), and per-class recall."""
+(paper §4.3 embedding-quality claim), and per-class recall.
+
+`macro_auc_traced` is the jax-traceable twin of `macro_auc` (pairwise
+Mann-Whitney with half-credit ties) used for the swarm engine's in-graph
+validation gate — same value up to f32, no host round-trip."""
 from __future__ import annotations
 
 import numpy as np
@@ -32,6 +36,39 @@ def macro_auc(probs: np.ndarray, labels: np.ndarray) -> float:
     cs = [binary_auc(probs[:, c], labels == c)
           for c in range(probs.shape[1]) if (labels == c).any()]
     return float(np.mean(cs)) if cs else 0.5
+
+
+def macro_auc_traced(probs, labels, valid=None):
+    """Jax-traceable one-vs-rest macro AUC over [V, C] probs.
+
+    Pairwise Mann-Whitney (ties get half credit) — identical to `macro_auc`
+    up to f32 — computed fully in-graph so the swarm gate needs no host sync.
+    `valid` masks padded rows (per-node validation sets differ in size and
+    are padded to a common V for the vmapped engine eval).
+    """
+    import jax.numpy as jnp
+
+    probs = jnp.asarray(probs)
+    labels = jnp.asarray(labels)
+    v = (jnp.ones(labels.shape, bool) if valid is None
+         else jnp.asarray(valid).astype(bool))
+
+    def one_class(c):
+        s = probs[:, c]
+        pos = (labels == c) & v
+        neg = (labels != c) & v
+        pair = pos[:, None] & neg[None, :]
+        diff = s[:, None] - s[None, :]
+        wins = jnp.where(diff > 0, 1.0, 0.0) + jnp.where(diff == 0, 0.5, 0.0)
+        u = jnp.sum(jnp.where(pair, wins, 0.0))
+        n_pairs = pos.sum() * neg.sum()
+        auc = jnp.where(n_pairs > 0, u / jnp.maximum(n_pairs, 1), 0.5)
+        return auc, pos.sum() > 0
+
+    aucs, present = zip(*[one_class(c) for c in range(probs.shape[1])])
+    aucs = jnp.stack(aucs)
+    present = jnp.stack(present).astype(jnp.float32)
+    return jnp.sum(aucs * present) / jnp.maximum(present.sum(), 1.0)
 
 
 def confusion_stats(preds: np.ndarray, labels: np.ndarray, n_classes: int):

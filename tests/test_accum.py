@@ -9,8 +9,10 @@ from repro.launch.train import init_train_state, make_train_step
 from repro.models import build_model
 
 
-@pytest.mark.parametrize("accum", [2, 4])
-def test_accum_matches_full_batch(accum):
+@pytest.fixture(scope="module")
+def full_step_state():
+    """Model, init state, batch, and the full-batch reference step — shared
+    so every accum setting compiles only its own microbatched step."""
     cfg = smoke_variant(get_config("minicpm-2b"))
     model = build_model(cfg)
     params, opt = init_train_state(model, jax.random.key(0))
@@ -20,9 +22,15 @@ def test_accum_matches_full_batch(accum):
         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
     }
     full = jax.jit(make_train_step(model, TrainConfig(lr=1e-3, remat=False)))
+    p1, _, m1 = full(params, opt, batch)
+    return model, params, opt, batch, p1, m1
+
+
+@pytest.mark.parametrize("accum", [2, 4])
+def test_accum_matches_full_batch(accum, full_step_state):
+    model, params, opt, batch, p1, m1 = full_step_state
     micro = jax.jit(make_train_step(
         model, TrainConfig(lr=1e-3, remat=False, accum_steps=accum)))
-    p1, _, m1 = full(params, opt, batch)
     p2, _, m2 = micro(params, opt, batch)
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):

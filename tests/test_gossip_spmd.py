@@ -1,5 +1,7 @@
-"""SPMD gossip collectives need >1 device; run each check in a subprocess
-with XLA_FLAGS so the main test process keeps seeing 1 CPU device."""
+"""SPMD gossip collectives need >1 device; all checks run in ONE subprocess
+with XLA_FLAGS forcing 8 host devices (the main test process keeps seeing 1
+CPU device), each printing an `OK <tag>` marker the tests assert on —
+amortizing the jax import + mesh setup across the whole module."""
 import os
 import subprocess
 import sys
@@ -11,142 +13,159 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _run(code: str):
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=SRC)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    # append so conftest's compile-time flags survive in the subprocess
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     return out.stdout
 
 
-def test_fedavg_gossip_matches_host_merge():
-    _run("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core.gossip import fedavg_gossip
-    mesh = jax.make_mesh((4, 2), ("node", "model"), devices=jax.devices())
-    rng = np.random.default_rng(0)
-    tree = {"w": jnp.asarray(rng.normal(0, 1, (4, 8, 6)), jnp.float32),
-            "skip": None}
-    w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
-    out = jax.jit(lambda t: fedavg_gossip(t, w, mesh, "node"))(tree)
-    want = np.tensordot(np.asarray(w), np.asarray(tree["w"]), axes=(0, 0))
-    for i in range(4):
-        np.testing.assert_allclose(np.asarray(out["w"][i]), want, rtol=1e-5)
-    assert out["skip"] is None
-    print("OK")
-    """)
+_CHECKS = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig, SwarmConfig, TrainConfig
+from repro.core.gossip import (fedavg_gossip, fisher_gossip, matrix_gossip,
+                               ring_gossip)
+from repro.core.merge_impl import fisher_merge
+from repro.core.swarm import gate_decisions, gated_commit
+from repro.core.topology import dynamic_matrix, full_matrix, ring_matrix
+from repro.launch.train import (make_swarm_train_step, make_swarm_sync_step,
+                                init_train_state)
+from repro.models import build_model
+
+mesh = jax.make_mesh((4, 2), ("node", "model"), devices=jax.devices())
+
+# --- fedavg gossip == host weighted merge -------------------------------
+rng = np.random.default_rng(0)
+tree = {"w": jnp.asarray(rng.normal(0, 1, (4, 8, 6)), jnp.float32),
+        "skip": None}
+w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+out = jax.jit(lambda t: fedavg_gossip(t, w, mesh, "node"))(tree)
+want = np.tensordot(np.asarray(w), np.asarray(tree["w"]), axes=(0, 0))
+for i in range(4):
+    np.testing.assert_allclose(np.asarray(out["w"][i]), want, rtol=1e-5)
+assert out["skip"] is None
+print("OK fedavg")
+
+# --- ring gossip == ring mixing matrix ----------------------------------
+rng = np.random.default_rng(1)
+x = jnp.asarray(rng.normal(0, 1, (4, 5, 3)), jnp.float32)
+out = jax.jit(lambda t: ring_gossip(t, mesh, "node", 0.5))({"x": x})["x"]
+want = np.tensordot(ring_matrix(4, 0.5), np.asarray(x), axes=(1, 0))
+np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
+print("OK ring")
+
+# --- matrix gossip with dynamic membership ------------------------------
+rng = np.random.default_rng(2)
+x = jnp.asarray(rng.normal(0, 1, (4, 7)), jnp.float32)
+W = dynamic_matrix(full_matrix(4, [1, 3, 3, 3]), [True, True, False, True])
+out = jax.jit(lambda t: matrix_gossip(t, W, mesh, "node"))({"x": x})["x"]
+np.testing.assert_allclose(np.asarray(out), W @ np.asarray(x),
+                           rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(np.asarray(out[2]), np.asarray(x[2]))
+print("OK matrix_dynamic")
+
+# --- fisher gossip == host fisher merge ---------------------------------
+rng = np.random.default_rng(3)
+x = {"w": jnp.asarray(rng.normal(0, 1, (4, 6, 4)), jnp.float32)}
+f = {"w": jnp.asarray(np.abs(rng.normal(1, 0.3, (4, 6, 4))), jnp.float32)}
+out = jax.jit(lambda t, ff: fisher_gossip(t, ff, mesh, "node"))(x, f)["w"]
+np.testing.assert_allclose(np.asarray(out), np.asarray(fisher_merge(x, f)["w"]),
+                           rtol=1e-5, atol=1e-6)
+print("OK fisher")
+
+# --- full SPMD swarm step: vmapped train + gossip + gated commit --------
+cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=128)
+model = build_model(cfg)
+tc = TrainConfig(lr=1e-3, remat=False, warmup_steps=1, max_steps=10)
+keys = jax.random.split(jax.random.key(0), 4)
+ps, os_ = [], []
+for k in keys:
+    p, o = init_train_state(model, k)
+    ps.append(p); os_.append(o)
+stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+params, opts = stack(ps), stack(os_)
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, 128, (4, 2, 16)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, 128, (4, 2, 16)), jnp.int32)}
+step = jax.jit(make_swarm_train_step(model, tc))
+params2, opts2, metrics = step(params, opts, batch)
+assert metrics["loss"].shape == (4,)
+assert np.isfinite(np.asarray(metrics["loss"])).all()
+
+scfg = SwarmConfig(n_nodes=4, topology="ring", merge="fedavg",
+                   lora_only=False, val_threshold=0.8)
+propose, commit = make_swarm_sync_step(scfg, mesh, "node", [1, 3, 3, 3])
+cand = jax.jit(propose)(params2)
+assert all(jax.tree.leaves(
+    jax.tree.map(lambda a, b: a.shape == b.shape, cand, params2)))
+merged_metric = jnp.asarray([1.0, 1.0, 0.1, 1.0])
+local_metric = jnp.ones(4)
+final = jax.jit(commit)(cand, params2, merged_metric, local_metric)
+# node 2 rejected -> keeps local
+l2 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a[2]-b[2]).max()),
+                                  final, params2))
+assert max(l2) == 0.0
+# node 0 accepted -> took the merge
+l0 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a[0]-b[0]).max()),
+                                  final, cand))
+assert max(l0) == 0.0
+print("OK swarm_step")
+
+# --- dynamic membership with a TRACED active mask under jit --------------
+dcfg = SwarmConfig(n_nodes=4, topology="dynamic", merge="fedavg",
+                   lora_only=False)
+prop_dyn, _ = make_swarm_sync_step(dcfg, mesh, "node", [1, 3, 3, 3])
+active = jnp.asarray([True, True, False, True])
+cand2 = jax.jit(lambda p, a: prop_dyn(p, active=a))(params2, active)
+l2 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a[2]-b[2]).max()),
+                                  cand2, params2))
+assert max(l2) == 0.0  # absent node keeps its params
+print("OK dynamic_traced")
+
+# --- production mesh guard ----------------------------------------------
+from repro.launch.mesh import make_production_mesh
+try:
+    make_production_mesh()
+    raise SystemExit("should have raised")
+except RuntimeError as e:
+    assert "need" in str(e) and "XLA_FLAGS" in str(e)
+print("OK mesh_guard")
+"""
+
+@pytest.fixture(scope="module")
+def spmd_out():
+    return _run(_CHECKS)  # module scope: the subprocess runs once
 
 
-def test_ring_gossip_matches_mixing_matrix():
-    _run("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core.gossip import ring_gossip
-    from repro.core.topology import ring_matrix
-    mesh = jax.make_mesh((4, 2), ("node", "model"), devices=jax.devices())
-    rng = np.random.default_rng(1)
-    x = jnp.asarray(rng.normal(0, 1, (4, 5, 3)), jnp.float32)
-    out = jax.jit(lambda t: ring_gossip(t, mesh, "node", 0.5))({"x": x})["x"]
-    want = np.tensordot(ring_matrix(4, 0.5), np.asarray(x), axes=(1, 0))
-    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
-    print("OK")
-    """)
+def test_fedavg_gossip_matches_host_merge(spmd_out):
+    assert "OK fedavg" in spmd_out
 
 
-def test_matrix_gossip_dynamic_membership():
-    _run("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core.gossip import matrix_gossip
-    from repro.core.topology import dynamic_matrix, full_matrix
-    mesh = jax.make_mesh((4, 2), ("node", "model"), devices=jax.devices())
-    rng = np.random.default_rng(2)
-    x = jnp.asarray(rng.normal(0, 1, (4, 7)), jnp.float32)
-    W = dynamic_matrix(full_matrix(4, [1, 3, 3, 3]), [True, True, False, True])
-    out = jax.jit(lambda t: matrix_gossip(t, W, mesh, "node"))({"x": x})["x"]
-    want = W @ np.asarray(x)
-    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
-    # absent node 2 keeps its params exactly
-    np.testing.assert_allclose(np.asarray(out[2]), np.asarray(x[2]))
-    print("OK")
-    """)
+def test_ring_gossip_matches_mixing_matrix(spmd_out):
+    assert "OK ring" in spmd_out
 
 
-def test_swarm_spmd_train_and_sync_step():
+def test_matrix_gossip_dynamic_membership(spmd_out):
+    assert "OK matrix_dynamic" in spmd_out
+
+
+def test_fisher_gossip_matches_host_merge(spmd_out):
+    assert "OK fisher" in spmd_out
+
+
+def test_swarm_spmd_train_and_sync_step(spmd_out):
     """Full SPMD swarm step: vmapped local training + gossip + gated commit."""
-    _run("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.configs.base import ModelConfig, SwarmConfig, TrainConfig
-    from repro.core.swarm import gate_decisions, gated_commit
-    from repro.launch.train import (make_swarm_train_step, make_swarm_sync_step,
-                                    init_train_state)
-    from repro.models import build_model
-    mesh = jax.make_mesh((4, 2), ("node", "model"), devices=jax.devices())
-    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
-                      d_ff=128, vocab_size=128)
-    model = build_model(cfg)
-    tc = TrainConfig(lr=1e-3, remat=False, warmup_steps=1, max_steps=10)
-    # stacked per-node state
-    keys = jax.random.split(jax.random.key(0), 4)
-    ps, os_ = [], []
-    for k in keys:
-        p, o = init_train_state(model, k)
-        ps.append(p); os_.append(o)
-    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
-    params, opts = stack(ps), stack(os_)
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(rng.integers(0, 128, (4, 2, 16)), jnp.int32),
-             "labels": jnp.asarray(rng.integers(0, 128, (4, 2, 16)), jnp.int32)}
-    step = jax.jit(make_swarm_train_step(model, tc))
-    params2, opts2, metrics = step(params, opts, batch)
-    assert metrics["loss"].shape == (4,)
-    assert np.isfinite(np.asarray(metrics["loss"])).all()
-
-    scfg = SwarmConfig(n_nodes=4, topology="ring", merge="fedavg",
-                       lora_only=False, val_threshold=0.8)
-    propose, commit = make_swarm_sync_step(scfg, mesh, "node", [1, 3, 3, 3])
-    cand = jax.jit(propose)(params2)
-    # gossip changed params (nodes differ) but preserved shapes
-    assert jax.tree.map(lambda a, b: a.shape == b.shape, cand, params2)
-    merged_metric = jnp.asarray([1.0, 1.0, 0.1, 1.0])
-    local_metric = jnp.ones(4)
-    final = jax.jit(commit)(cand, params2, merged_metric, local_metric)
-    # node 2 rejected -> keeps local
-    l2 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a[2]-b[2]).max()),
-                                      final, params2))
-    assert max(l2) == 0.0
-    # node 0 accepted -> took the merge
-    l0 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a[0]-b[0]).max()),
-                                      final, cand))
-    assert max(l0) == 0.0
-    print("OK")
-    """)
+    assert "OK swarm_step" in spmd_out
 
 
-def test_fisher_gossip_matches_host_merge():
-    _run("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core.gossip import fisher_gossip
-    from repro.core.merge_impl import fisher_merge
-    mesh = jax.make_mesh((4, 2), ("node", "model"), devices=jax.devices())
-    rng = np.random.default_rng(3)
-    x = {"w": jnp.asarray(rng.normal(0, 1, (4, 6, 4)), jnp.float32)}
-    f = {"w": jnp.asarray(np.abs(rng.normal(1, 0.3, (4, 6, 4))), jnp.float32)}
-    out = jax.jit(lambda t, ff: fisher_gossip(t, ff, mesh, "node"))(x, f)["w"]
-    want = fisher_merge(x, f)["w"]
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                               rtol=1e-5, atol=1e-6)
-    print("OK")
-    """)
+def test_dynamic_membership_traced_active_mask(spmd_out):
+    """Gossip propose works under jit with a traced (runtime) active mask."""
+    assert "OK dynamic_traced" in spmd_out
 
 
-def test_production_mesh_requires_devices():
-    _run("""
-    from repro.launch.mesh import make_production_mesh
-    # only 8 devices in this subprocess: expect the informative failure
-    try:
-        make_production_mesh()
-        raise SystemExit("should have raised")
-    except RuntimeError as e:
-        assert "need" in str(e) and "XLA_FLAGS" in str(e)
-    print("OK")
-    """)
+def test_production_mesh_requires_devices(spmd_out):
+    assert "OK mesh_guard" in spmd_out

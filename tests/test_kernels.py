@@ -51,6 +51,51 @@ def test_fused_merge_tree():
     assert out["skip"] is None
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_merge_all_parity_with_merge_impl(dtype):
+    """All-nodes fused commit == mix + where for every gate pattern, incl.
+    None (lora_only) leaves and non-multiple-of-block D."""
+    from repro.core.merge_impl import mix
+    from repro.kernels.fused_merge import fused_merge_all
+
+    rng = np.random.default_rng(0)
+    n = 4
+    shapes = [(6, 9), (300,), (3, 5, 2)]   # 54 / 300 / 30 elems vs block 128
+    tree = {f"l{i}": jnp.asarray(rng.normal(0, 1, (n,) + s)).astype(dtype)
+            for i, s in enumerate(shapes)}
+    tree["skip"] = None
+    W = jnp.asarray(rng.dirichlet(np.ones(n), size=n), jnp.float32)
+    mixed = mix({k: v for k, v in tree.items() if v is not None}, W)
+    for gates in ([True] * 4, [True, False, False, True], [False] * 4):
+        g = np.asarray(gates)
+        out = fused_merge_tree(tree, W, None, jnp.asarray(g),
+                               block=128, interpret=True)
+        assert out["skip"] is None
+        for k, v in mixed.items():
+            gb = g.reshape((n,) + (1,) * (v.ndim - 1))
+            want = np.where(gb, np.asarray(v, np.float32),
+                            np.asarray(tree[k], np.float32))
+            np.testing.assert_allclose(np.asarray(out[k], np.float32), want,
+                                       **_tol(dtype))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_fused_merge_all_rows_match_per_node_oracle(seed):
+    """out[i] of the all-nodes kernel == the per-node reference for row i."""
+    from repro.kernels.fused_merge import fused_merge_all
+
+    rng = np.random.default_rng(seed)
+    n, d = 4, 777
+    x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    W = jnp.asarray(rng.dirichlet(np.ones(n), size=n), jnp.float32)
+    gates = jnp.asarray(rng.random(n) > 0.5)
+    out = fused_merge_all(x, W, gates, block=256, interpret=True)
+    for i in range(n):
+        want = ref.fused_merge_ref(x, W[i], i, bool(gates[i]))
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
 # property: merge with identity row == self row regardless of gate
 @pytest.mark.parametrize("seed", range(5))
 def test_fused_merge_identity_property(seed):
