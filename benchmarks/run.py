@@ -9,11 +9,20 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
   scarcity_node3_5pct  §4.1 extreme-scarcity trial (5%)
   tbl_dbi           §4.3 embedding quality: swarm DBI < local DBI
   tbl_minority      §4.3 minority-class recall improvement
-  merge_kernel      fused swarm-merge: Pallas-fused vs unfused XLA timing
+  merge_kernel      fused swarm-merge: Pallas-fused vs unfused XLA timing,
+                    incl. the importance-weighted (fisher/gradmatch) form
   lora_payload      §3.2 LoRA-only sync payload vs full-model payload
   gossip_spectrum   consensus rate (spectral gap) per topology
   sync_roundtrip    host-sim 4-node sync wall time (propose+gate+commit)
   engine_roundtrip  jitted stacked engine round (local steps + gated sync)
+  overlap_roundtrip double-buffered stale-by-one rounds vs serial rounds
+  spmd_parity       full SwarmEngine(backend="gossip") round vs the host
+                    backend on a forced CPU device mesh (subprocess):
+                    wall time + estimated collective bytes per sync
+
+``--smoke`` runs a seconds-scale subset (tiny shapes, no cached experiment
+protocol) so CI can exercise every benchmark entry point; a tier-1 test
+invokes it, keeping this harness from rotting.
 
 Full protocol runs live in examples/histopathology_swarm.py; these benchmarks
 use a reduced-but-faithful configuration (and reuse cached full results from
@@ -111,16 +120,17 @@ def tbl_minority():
     print(f"tbl_minority_recall_gain_pts,0,{100 * (sr - lr):.2f}")
 
 
-def merge_kernel():
+def merge_kernel(d: int = 1 << 20):
+    from repro.core.merge_impl import fisher_merge
     from repro.kernels.fused_merge import fused_merge
     from repro.kernels.ref import fused_merge_ref
-    n, d = 4, 1 << 20
+    n = 4
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
     w = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
     ref_jit = jax.jit(lambda: fused_merge_ref(x, w, 0, True))
     us_ref = _time_us(lambda: ref_jit())
-    print(f"merge_unfused_xla_4x1M,{us_ref:.1f},baseline")
+    print(f"merge_unfused_xla_4x{d},{us_ref:.1f},baseline")
     # correctness of the fused kernel on the same inputs (interpret on CPU)
     got = fused_merge(x, w, 0, True, interpret=True)
     err = float(jnp.max(jnp.abs(got - ref_jit())))
@@ -133,9 +143,19 @@ def merge_kernel():
     want_all = jnp.where(gates[:, None].astype(bool), Wm @ x, x)
     err = float(jnp.max(jnp.abs(got_all - want_all)))
     print(f"merge_fused_all_nodes_validated,0,maxerr={err:.2e}")
-    # derived: HBM-roofline time for the fused pass on TPU v5e
+    # importance-weighted form (the fisher/gradmatch commit)
+    f = jnp.asarray(np.abs(rng.normal(1, 0.5, (n, d))), jnp.float32) + 1e-8
+    got_imp = fused_merge_all(x, jnp.ones((n, n)), gates, f, interpret=True)
+    want_m = fisher_merge({"x": x}, {"x": f - 1e-8})["x"]
+    want_imp = jnp.where(gates[:, None].astype(bool), want_m, x)
+    err = float(jnp.max(jnp.abs(got_imp - want_imp)))
+    print(f"merge_fused_weighted_validated,0,maxerr={err:.2e}")
+    # derived: HBM-roofline time for the fused passes on TPU v5e
     bytes_moved = (n + 1) * d * 4
     print(f"merge_fused_v5e_roofline_us,0,{bytes_moved / 819e9 * 1e6:.1f}")
+    bytes_weighted = (2 * n + 1) * d * 4  # params + importance tiles in
+    print(f"merge_fused_weighted_v5e_roofline_us,0,"
+          f"{bytes_weighted / 819e9 * 1e6:.1f}")
 
 
 def lora_payload():
@@ -221,9 +241,157 @@ def engine_roundtrip():
           f"jitted local+propose+gate+fused_commit")
 
 
+def overlap_roundtrip(reps: int = 10):
+    """Stale-by-one double-buffered rounds vs serial rounds, host backend:
+    the overlap schedule must cost no more than serial (same work + one add;
+    on hardware with async collectives the merge then hides behind the next
+    round's local steps)."""
+    from repro.configs.base import SwarmConfig
+    from repro.core.engine import SwarmEngine
+    rng = np.random.default_rng(0)
+    n, t, r = 4, 8, 4
+    w0 = jnp.asarray(rng.normal(0, 0.1, (n, 128, 128)), jnp.float32)
+    batches = jnp.zeros((r, t, n, 1))
+    val = jnp.zeros((n, 1))
+
+    def train_step(p, o, b, s):
+        # a real (matmul) local step so the sync/compute share is
+        # representative — overlap's extra adds must amortize against it
+        g = jnp.tanh(p["w"] @ p["w"].T) * 1e-3
+        return {"w": p["w"] - g}, {"m": o["m"] + g}, {"loss": jnp.sum(g * g)}
+
+    def eval_fn(p, v):
+        return 1.0 - 0.0 * jnp.sum(p["w"])
+
+    def make_runner(overlap):
+        cfg = SwarmConfig(n_nodes=n, sync_every=t, topology="full",
+                          merge="fedavg", lora_only=False, val_threshold=0.0,
+                          overlap_sync=overlap)
+        eng = SwarmEngine(cfg, train_step, eval_fn)
+        # fresh buffers per config: the engine donates (params, opt_state)
+        state = {"p": {"w": w0.copy()}, "o": {"m": jnp.zeros_like(w0)}}
+
+        def once():
+            p, o, _, _ = eng.run_rounds(state["p"], state["o"], batches, val,
+                                        None, 0)
+            state["p"], state["o"] = p, o
+            return p["w"]
+
+        return once
+
+    runners = {ov: make_runner(ov) for ov in (False, True)}
+    # alternate measurement passes and keep the per-mode minimum — the
+    # robust floor estimate on a noisy shared-CPU runner
+    times = {False: float("inf"), True: float("inf")}
+    for _ in range(3):
+        for ov in (False, True):
+            times[ov] = min(times[ov], _time_us(runners[ov], reps=reps))
+    for ov in (False, True):
+        name = "overlap" if ov else "serial"
+        print(f"engine_round_{name}_us,{times[ov] / r:.1f},"
+              f"{r}rounds_x{t}steps_fedavg")
+    print(f"overlap_vs_serial_ratio,0,{times[True] / times[False]:.3f}")
+
+
+def _spmd_parity_inner(n: int, t: int, d: int, reps: int):
+    """Runs inside the forced-device-count subprocess: one full engine round
+    per backend (host vs gossip) on identical state, timed + compared."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.base import SwarmConfig
+    from repro.core.engine import SwarmEngine
+
+    assert jax.device_count() >= n, "inner bench needs the forced device count"
+    mesh = jax.make_mesh((n,), ("node",), devices=jax.devices()[:n])
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    batches = jnp.zeros((t, n, 1))
+    val = jnp.zeros((n, 1))
+    sizes = [float(i + 1) for i in range(n)]
+
+    finals = {}
+    for backend in ("host", "gossip"):
+        cfg = SwarmConfig(n_nodes=n, sync_every=t, topology="full",
+                          merge="fedavg", lora_only=False, val_threshold=0.0)
+        # fresh buffers per backend: the engine donates (params, opt_state)
+        params, opt = {"w": w0.copy()}, {"m": jnp.zeros_like(w0)}
+        kw = {}
+        if backend == "gossip":
+            kw = dict(backend="gossip", mesh=mesh, axis="node")
+            sh = NamedSharding(mesh, P("node"))
+            params = jax.device_put(params, sh)
+            opt = jax.device_put(opt, sh)
+
+        def train_step(p, o, b, s):
+            g = p["w"] * 1e-3 + 0.0 * b.mean()
+            return ({"w": p["w"] - g}, {"m": o["m"] + g},
+                    {"loss": jnp.sum(g * g)})
+
+        def eval_fn(p, v):
+            return 1.0 - 0.0 * jnp.sum(p["w"])
+
+        eng = SwarmEngine(cfg, train_step, eval_fn, data_sizes=sizes, **kw)
+        state = {"p": params, "o": opt}
+
+        def once():
+            p, o, _ = eng.round(state["p"], state["o"], batches, val, None, 0)
+            state["p"], state["o"] = p, o
+            return p["w"]
+
+        us = _time_us(once, reps=reps)
+        finals[backend] = (us, np.asarray(state["p"]["w"]))
+        print(f"spmd_parity_{backend}_round_us,{us:.1f},n={n};t={t};d={d}")
+
+    err = float(np.abs(finals["host"][1] - finals["gossip"][1]).max())
+    print(f"spmd_parity_max_abs_diff,0,{err:.2e}")
+    print(f"spmd_parity_gossip_over_host,0,"
+          f"{finals['gossip'][0] / finals['host'][0]:.3f}")
+    # estimated collective bytes per sync, per device: the fedavg psum
+    # lowers to a ring allreduce over the [d] merged payload
+    bytes_sync = 2 * d * 4 * (n - 1) / n
+    print(f"spmd_parity_collective_bytes_per_sync,0,{bytes_sync:.0f}")
+
+
+def spmd_parity(smoke: bool = False):
+    """ROADMAP SPMD engine parity: a full SwarmEngine(backend="gossip") round
+    vs the host backend on a multi-device CPU mesh. Runs in a subprocess so
+    the forced host device count doesn't leak into other benchmarks."""
+    import subprocess
+    import sys
+    n, t, d, reps = (4, 2, 1 << 12, 3) if smoke else (4, 4, 1 << 16, 10)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}").strip()
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--inner-spmd-parity", f"{n},{t},{d},{reps}"],
+        capture_output=True, text=True, env=env, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"spmd parity subprocess failed: "
+                           f"{out.stderr[-800:]}")
+    print(out.stdout, end="")
+
+
+def spmd_parity_smoke():
+    spmd_parity(smoke=True)
+
+
+def merge_kernel_smoke():
+    merge_kernel(1 << 14)
+
+
+def overlap_roundtrip_smoke():
+    overlap_roundtrip(reps=3)
+
+
 ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
-       sync_roundtrip, engine_roundtrip]
+       sync_roundtrip, engine_roundtrip, overlap_roundtrip, spmd_parity]
+
+# seconds-scale subset covering every benchmark family (tier-1 smoke test)
+SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
+         engine_roundtrip, overlap_roundtrip_smoke, spmd_parity_smoke]
 
 
 def roofline_table():
@@ -237,9 +405,25 @@ def roofline_table():
               f"useful={r['useful_ratio']:.3f};peakGiB={r['peak_gib']:.1f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="benchmark harness")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI (no cached protocols)")
+    ap.add_argument("--inner-spmd-parity", default="",
+                    help="internal: n,t,d,reps (run inside the forced-device"
+                         " subprocess)")
+    args = ap.parse_args(argv)
+
+    if args.inner_spmd_parity:
+        n, t, d, reps = map(int, args.inner_spmd_parity.split(","))
+        _spmd_parity_inner(n, t, d, reps)
+        return
+
     print("name,us_per_call,derived")
-    for fn in ALL + [roofline_table]:
+    fns = SMOKE if args.smoke else ALL + [roofline_table]
+    for fn in fns:
         try:
             fn()
         except Exception as e:  # noqa: BLE001

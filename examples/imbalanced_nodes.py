@@ -13,6 +13,14 @@ example does, comparing on the same biased-shard setup:
 Also demonstrates DYNAMIC MEMBERSHIP: node 3 leaves the swarm mid-training
 and re-joins later (the paper's §3.1 join/leave semantics).
 
+Note on fisher/gradmatch here: importance mass comes from the strategy's
+in-graph Δθ² accumulation (no host-side Fisher loop). Because this example
+trains with AdamW — whose step sizes are ~lr regardless of gradient scale —
+that proxy is closer to update-activity weighting than exact curvature, so
+fisher/gradmatch land nearer fedavg than they would with true squared-grad
+Fishers (set ``node.fisher`` explicitly to supply those; see
+`merge_impl.FisherStrategy`).
+
 Run:  PYTHONPATH=src python examples/imbalanced_nodes.py [--steps 150]
 """
 import argparse
@@ -64,10 +72,6 @@ def run(swarm_cfg, steps, dynamic=False, seed=0):
         return classify_report(np.asarray(predict(params, jnp.asarray(x))),
                                y)["auc"]
 
-    def fisher_estimate(params, x, y):
-        g = jax.grad(loss)(params, jnp.asarray(x), jnp.asarray(y))
-        return jax.tree.map(lambda t: jnp.square(t) + 1e-8, g)
-
     key = jax.random.key(42)
     nodes = [NodeState(params=init_cnn(key, None, growth=8, stem=16,
                                        feat_dim=96, hidden=32),
@@ -93,11 +97,9 @@ def run(swarm_cfg, steps, dynamic=False, seed=0):
                 iters[i] = batches(s[0], s[1], 16, rngs[i])
                 b = next(iters[i])
             bs.append(b)
+        # fisher/gradmatch importance mass accumulates inside local_steps
+        # via the configured MergeStrategy — no host-side estimation loop
         sw.local_steps(bs)
-        if swarm_cfg.merge in ("fisher", "gradmatch"):
-            for i, n in enumerate(sw.nodes):
-                if n.active and bs[i] is not None:
-                    n.fisher = fisher_estimate(n.params, *bs[i])
         sw.maybe_sync(vals)
 
     aucs = [classify_report(np.asarray(predict(n.params, jnp.asarray(test_x))),

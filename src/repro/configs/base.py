@@ -154,6 +154,8 @@ class SwarmConfig:
     val_threshold: float = 0.8    # paper: validation-based acceptance at 80%
     gate_metric: str = "accuracy"
     self_weight: float = 0.5      # gossip self-mixing weight (ring)
+    fisher_decay: float = 0.95    # EMA decay of in-graph importance stats
+    overlap_sync: bool = False    # stale-by-one double-buffered round overlap
     seed: int = 0
 
 

@@ -1,9 +1,11 @@
 """P2P Swarm Learning core — the paper's contribution as a composable module."""
 from repro.core.engine import (  # noqa: F401
-    SwarmEngine, active_weights, host_commit,
+    SwarmEngine, active_weights, host_commit, strategy_propose,
 )
 from repro.core.merge_impl import (  # noqa: F401
-    fisher_merge, gradmatch_merge, merge, mix, stack_params, unstack_params,
+    FisherStrategy, GradMatchStrategy, MergeStrategy, MixStrategy,
+    fisher_merge, get_strategy, gradmatch_merge, merge, mix, stack_params,
+    unstack_params,
 )
 from repro.core.swarm import (  # noqa: F401
     NodeState, SwarmLearner, gate_decisions, gated_commit, mixing_matrix,

@@ -8,31 +8,41 @@ This module compiles the round end-to-end over **stacked pytrees** (leading
 node axis N):
 
   local steps   ``jax.vmap`` of the user train step over the node axis,
-                ``jax.lax.scan`` over the ``sync_every`` time axis;
-  propose       mixing-matrix contraction (host backend, `merge_impl`) or
-                mesh collectives (gossip backend, `core.gossip`);
+                ``jax.lax.scan`` over the ``sync_every`` time axis; the
+                configured `merge_impl.MergeStrategy` accumulates per-node
+                importance statistics (Fisher mass) in the same scan;
+  propose       strategy-driven: mixing-matrix contraction or Fisher-
+                weighted merge (host backend) / mesh collectives (gossip
+                backend, `core.gossip`) — every merge method in-graph;
   gate          in-graph validation metrics for local AND merged params
                 (``jax.vmap`` of a traceable ``eval_fn``) → per-node accept
                 bits — no host scalar sync anywhere in the round;
-  commit        `kernels.fused_merge.fused_merge_tree` with a full mixing
-                matrix: the Pallas kernel fuses contraction-over-nodes and
-                gating into one VMEM pass per leaf (interpret-mode on CPU).
+  commit        `kernels.fused_merge.fused_merge_tree`: the Pallas kernel
+                fuses contraction-over-nodes (W rows, optionally importance-
+                weighted for fisher/gradmatch) and gating into one VMEM pass
+                per leaf (interpret-mode on CPU).
 
 API
 ---
 ``SwarmEngine(cfg, train_step_fn, eval_fn, *, data_sizes, backend, ...)``
 
-  * ``engine.round(params, opt_state, batches, val, active, step0)``
+  * ``engine.round(params, opt_state, batches, val, active, step0, stats)``
       one jitted round: ``[T, N, ...]`` batches → T vmapped local steps +
-      propose + gate + fused commit. ``(params, opt_state)`` are donated, so
-      the round updates buffers in place.
+      propose + gate + fused commit. ``(params, opt_state, stats)`` are
+      donated, so the round updates buffers in place. ``out["stats"]``
+      carries the updated importance accumulators for weighted merges.
   * ``engine.run_rounds(params, opt_state, batches, val, active, step0)``
       ``jax.lax.scan`` driver over ``[R, T, N, ...]`` batches: R full rounds
-      with zero host round-trips between them. Returns per-round train metrics
-      and sync logs (gates / metric_local / metric_merged, ``[R, N]``).
-  * ``engine.run_local(params, opt_state, batches, step0)``
+      with zero host round-trips between them (fisher/gradmatch statistics
+      live inside the scan carry). Returns per-round train metrics and sync
+      logs (gates / metric_local / metric_merged, ``[R, N]``). With
+      ``cfg.overlap_sync`` the commit of round k is produced as a *side
+      value* and folded in after round k+1's local steps (stale-by-one,
+      double-buffered params) so the collective/merge overlaps compute.
+  * ``engine.run_local(params, opt_state, batches, step0, stats)``
       sync-free local training over ``[S, N, ...]`` batches (isolated
-      baselines, remainder steps).
+      baselines, remainder steps) → ``(params, opt_state, metrics, stats)``;
+      stats stays None unless accumulators are threaded in.
   * ``engine.propose(stacked, active, fishers)`` / ``engine.sync(...)``
       the pure pieces, reused by `SwarmLearner` (host) and
       `launch.train.make_swarm_sync_step` (SPMD gossip backend).
@@ -40,20 +50,29 @@ API
 ``train_step_fn(params, opt_state, batch, step) -> (params, opt_state,
 metrics)`` and ``eval_fn(params, val) -> scalar in [0, 1]`` must be
 jax-traceable; arbitrary host callables stay on the `SwarmLearner` slow path,
-which still shares `propose_merge` / `host_commit` below.
+which still shares `strategy_propose` / `host_commit` below.
 
 Roofline
 --------
-The fused commit is memory-bound: for P stacked parameters the kernel moves
-2N·P·4 bytes (read the [N, BLOCK] tile once per column block, write N rows)
-— on TPU v5e (819 GB/s) that is ~9.8 µs per 10⁶ f32 params at N = 4, vs the
-unfused mix (N·P in + N·P out) plus where (3N·P) of the XLA pair. Note the
-gate forces the candidate to be materialized anyway (its validation metric
-is part of the round), so the fused commit re-contracts W·θ rather than
-re-reading candidate+local (2N·P vs 3N·P moved — the kernel also wins by
-skipping the second mix output). Everything else in the round (vmapped train
-steps) is compute-bound, so a round's wall time approaches T × (single-node
-step time) on hardware with N-way parallelism along the node axis.
+The fused commit is memory-bound. For P stacked parameters the mean/fedavg
+kernel moves 2N·P·4 bytes (read the [N, BLOCK] tile once per column block,
+write N rows) — on TPU v5e (819 GB/s) that is ~9.8 µs per 10⁶ f32 params at
+N = 4. The weighted (fisher/gradmatch) commit streams a second [N, BLOCK]
+importance tile alongside the params, so it moves 3N·P·4 bytes — ~14.7 µs
+per 10⁶ params at N = 4 — and fuses the numerator contraction, denominator
+reduction, normalization, and gate select into that single pass; the unfused
+XLA chain materializes numerator, denominator, candidate, and select as
+separate HBM round-trips (~6N·P moved). Note the gate forces the candidate
+to be materialized anyway (its validation metric is part of the round), so
+the fused commit re-contracts W·θ (or ΣFθ/ΣF) rather than re-reading
+candidate+local. Everything else in the round (vmapped train steps; the
+squared-delta Fisher accumulation is one extra elementwise FMA per step) is
+compute-bound, so a round's wall time approaches T × (single-node step time)
+on hardware with N-way parallelism along the node axis. In
+``overlap_sync`` mode the commit additionally leaves the critical path:
+round k+1's local steps depend only on round k's *local* params, and the
+merge/collective output is consumed one round late — on hardware with async
+collectives the sync cost hides entirely behind the next T local steps.
 """
 from __future__ import annotations
 
@@ -113,19 +132,9 @@ def active_weights_traced(data_sizes, active) -> jnp.ndarray:
     return jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0), jnp.full((n,), 1.0 / n))
 
 
-def mask_fishers(fishers, active):
-    """Zero departed nodes' Fisher mass so their stale params can't enter
-    fisher/gradmatch merges. The single implementation of that invariant —
-    both SwarmLearner.sync and SwarmEngine.propose call it (host bools or
-    traced masks)."""
-    a = jnp.asarray(active)
-
-    def one(f):
-        if f is None:
-            return None
-        return f * a.astype(f.dtype).reshape((f.shape[0],) + (1,) * (f.ndim - 1))
-
-    return jax.tree.map(one, fishers, is_leaf=lambda v: v is None)
+# the mask-departed-nodes invariant lives in merge_impl; re-exported here for
+# existing importers
+mask_fishers = merge_lib.mask_fishers
 
 
 def dynamic_matrix_traced(base, active) -> jnp.ndarray:
@@ -143,17 +152,31 @@ def dynamic_matrix_traced(base, active) -> jnp.ndarray:
     return jnp.where(rows > 0, W, eye)      # fully-isolated active rows too
 
 
-def propose_merge(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
-    """Merge candidate for every node. Honors lora_only payload selection."""
+def strategy_propose(stacked, cfg: SwarmConfig, W, *, fishers=None,
+                     weights=None, strategy=None):
+    """Merge candidate for every node via the configured `MergeStrategy`.
+
+    Honors lora_only payload selection. Returns ``(candidate, W_commit,
+    imp)``: the candidate pytree plus the row-weight matrix / optional
+    importance pytree (payload subtree when lora_only) that `host_commit`
+    re-contracts through the fused Pallas kernel.
+    """
+    strategy = strategy or merge_lib.get_strategy(cfg)
     if cfg.lora_only:
         adapters, base = split_adapters(stacked)
-        merged_adapters = merge_lib.merge(
-            adapters, cfg.merge if cfg.merge in ("fisher", "gradmatch") else "fedavg",
-            W=W, fishers=split_adapters(fishers)[0] if fishers is not None else None,
-            weights=weights)
-        return combine(merged_adapters, base)
-    method = cfg.merge if cfg.merge in ("fisher", "gradmatch") else "fedavg"
-    return merge_lib.merge(stacked, method, W=W, fishers=fishers, weights=weights)
+        f_payload = (split_adapters(fishers)[0] if fishers is not None
+                     else None)
+        cand, W_eff, imp = strategy.propose(adapters, W, weights=weights,
+                                            fishers=f_payload)
+        return combine(cand, base), W_eff, imp
+    return strategy.propose(stacked, W, weights=weights, fishers=fishers)
+
+
+def propose_merge(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
+    """Merge candidate for every node (candidate-only view of
+    :func:`strategy_propose`, kept for existing callers)."""
+    return strategy_propose(stacked, cfg, W, fishers=fishers,
+                            weights=weights)[0]
 
 
 def gate_decisions(metric_merged, metric_local, threshold: float,
@@ -180,21 +203,23 @@ def gated_commit(candidate, local, gates):
     return jax.tree.map(one, candidate, local, is_leaf=lambda x: x is None)
 
 
-def host_commit(stacked, candidate, W, gates, cfg: SwarmConfig, *,
+def host_commit(stacked, candidate, W, gates, cfg: SwarmConfig, *, imp=None,
                 block: int = DEFAULT_BLOCK, interpret: bool = False):
-    """Commit via the fused Pallas kernel when the candidate is a W-row mix
-    (mean/fedavg, any topology); fisher/gradmatch fall back to where-select.
+    """Commit via the fused Pallas kernel: mean/fedavg re-contract the W rows;
+    fisher/gradmatch pass their per-leaf importance weights (``imp``) so the
+    normalized weighted merge also runs in the single VMEM pass. Only a
+    candidate with no kernel form (gossip backend) falls back to where-select.
 
     lora_only: only adapter leaves are re-merged; base leaves pass through
     local params bit-exactly (candidate base == local base by construction).
     """
-    if cfg.merge in ("mean", "fedavg"):
+    if cfg.merge in ("mean", "fedavg") or imp is not None:
         kw = dict(block=block, interpret=interpret)
         if cfg.lora_only:
             adapters, base = split_adapters(stacked)
-            merged = fused_merge_tree(adapters, W, None, gates, **kw)
+            merged = fused_merge_tree(adapters, W, None, gates, imp=imp, **kw)
             return combine(merged, base)
-        return fused_merge_tree(stacked, W, None, gates, **kw)
+        return fused_merge_tree(stacked, W, None, gates, imp=imp, **kw)
     return gated_commit(candidate, stacked, gates)
 
 
@@ -202,27 +227,31 @@ def host_commit(stacked, candidate, W, gates, cfg: SwarmConfig, *,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _propose_jit(stacked, W, fishers, weights, cfg):
-    return propose_merge(stacked, cfg, W, fishers=fishers, weights=weights)
+    return strategy_propose(stacked, cfg, W, fishers=fishers, weights=weights)
 
 
 def propose_host(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
-    """One-call jitted propose (stack→mix fused by XLA; no eager dispatch)."""
+    """One-call jitted propose (stack→mix fused by XLA; no eager dispatch).
+
+    Returns ``(candidate, W_commit, imp)`` — see :func:`strategy_propose`.
+    """
     w = None if weights is None else jnp.asarray(weights, jnp.float32)
     return _propose_jit(stacked, jnp.asarray(W, jnp.float32), fishers, w, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block", "interpret"))
-def _commit_jit(stacked, candidate, W, gates, cfg, block, interpret):
-    return host_commit(stacked, candidate, W, gates, cfg,
+def _commit_jit(stacked, candidate, W, gates, imp, cfg, block, interpret):
+    return host_commit(stacked, candidate, W, gates, cfg, imp=imp,
                        block=block, interpret=interpret)
 
 
-def commit_host(stacked, candidate, W, gates, cfg: SwarmConfig, *,
+def commit_host(stacked, candidate, W, gates, cfg: SwarmConfig, *, imp=None,
                 block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = default_interpret()
     return _commit_jit(stacked, candidate, jnp.asarray(W, jnp.float32),
-                       jnp.asarray(gates).astype(bool), cfg, block, interpret)
+                       jnp.asarray(gates).astype(bool), imp, cfg, block,
+                       interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +275,8 @@ class SwarmEngine:
                  data_sizes: Optional[Sequence[float]] = None,
                  backend: str = "host", mesh=None, axis: Optional[str] = None,
                  param_specs=None, block: int = DEFAULT_BLOCK,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 strategy: Optional[merge_lib.MergeStrategy] = None):
         if backend not in ("host", "gossip"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend == "gossip" and (mesh is None or axis is None):
@@ -258,48 +288,64 @@ class SwarmEngine:
         self.interpret = default_interpret() if interpret is None else interpret
         self.data_sizes = (np.ones(cfg.n_nodes) if data_sizes is None
                            else np.asarray(data_sizes, np.float64))
+        self.strategy = strategy or merge_lib.get_strategy(cfg)
         self._vstep = (None if train_step_fn is None
                        else jax.vmap(train_step_fn, in_axes=(0, 0, 0, None)))
         self._veval = None if eval_fn is None else jax.vmap(eval_fn)
         self._base_W = mixing_matrix(cfg, self.data_sizes)
         self.spectral_gap = topo.spectral_gap(self._base_W)
 
-        # jitted entry points; (params, opt_state) buffers are donated so a
-        # round updates in place — callers must not reuse the inputs.
-        self.round = jax.jit(self._round, donate_argnums=(0, 1))
+        # jitted entry points; (params, opt_state, stats) buffers are donated
+        # so a round updates in place — callers must not reuse the inputs.
+        self.round = jax.jit(self._round, donate_argnums=(0, 1, 6))
         self.run_rounds = jax.jit(self._run_rounds, donate_argnums=(0, 1))
-        self.run_local = jax.jit(self._run_local, donate_argnums=(0, 1))
+        self.run_local = jax.jit(self._run_local, donate_argnums=(0, 1, 4))
+
+    def init_stats(self, stacked):
+        """Strategy importance accumulators (None for mean/fedavg)."""
+        return (self.strategy.init_stats(stacked)
+                if self.strategy.uses_stats else None)
 
     # -- local training ------------------------------------------------------
 
-    def local_steps(self, params, opt_state, batches, step0):
-        """scan over the leading [T] time axis of vmapped local steps."""
+    def local_steps(self, params, opt_state, batches, step0, stats=None):
+        """scan over the leading [T] time axis of vmapped local steps; the
+        strategy's importance accumulation rides in the same scan."""
         def body(carry, batch):
-            p, o, s = carry
-            p, o, m = self._vstep(p, o, batch, s)
-            return (p, o, s + 1), m
+            p, o, st, s = carry
+            p2, o2, m = self._vstep(p, o, batch, s)
+            if st is not None:
+                st = self.strategy.accumulate(st, p, p2, s)
+            return (p2, o2, st, s + 1), m
 
-        init = (params, opt_state, jnp.asarray(step0, jnp.int32))
-        (p, o, _), metrics = jax.lax.scan(body, init, batches)
-        return p, o, metrics
+        init = (params, opt_state, stats, jnp.asarray(step0, jnp.int32))
+        (p, o, st, _), metrics = jax.lax.scan(body, init, batches)
+        return p, o, st, metrics
 
     # -- propose -------------------------------------------------------------
 
-    def propose(self, stacked, active=None, fishers=None):
-        """Merge candidate for every node. Returns (candidate, W_or_None)."""
+    def propose(self, stacked, active=None, fishers=None, stats=None):
+        """Merge candidate for every node.
+
+        Returns ``(candidate, W_commit, imp)`` — ``W_commit``/``imp`` are
+        None on the gossip backend (commit is the in-graph where-select).
+        """
+        if fishers is None and stats is not None:
+            fishers = stats
         if self.backend == "gossip":
-            return self._propose_gossip(stacked, active, fishers), None
+            return self._propose_gossip(stacked, active, fishers), None, None
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
              else jnp.asarray(active).astype(bool))
         W = dynamic_matrix_traced(self._base_W, a)
         w = active_weights_traced(self.data_sizes, a)
-        if self.cfg.merge in ("fisher", "gradmatch") and fishers is None:
-            fishers = jax.tree.map(jnp.ones_like, stacked)  # = SwarmLearner default
-        if fishers is not None:
-            fishers = mask_fishers(fishers, a)
-        cand = propose_merge(stacked, self.cfg, W, fishers=fishers, weights=w)
-        return cand, W
+        if self.strategy.uses_stats and fishers is None:
+            # no evidence for any node -> zero mass everywhere, which the
+            # eps floor turns into a uniform mean (= SwarmLearner default)
+            fishers = jax.tree.map(jnp.zeros_like, stacked)
+        fishers = self.strategy.finalize_mass(fishers, a)
+        return strategy_propose(stacked, self.cfg, W, fishers=fishers,
+                                weights=w, strategy=self.strategy)
 
     def _propose_gossip(self, stacked, active, fishers):
         from repro.core import gossip
@@ -317,9 +363,19 @@ class SwarmEngine:
         else:
             payload, base = stacked, None
 
-        if cfg.merge == "fisher":
+        if cfg.merge in ("fisher", "gradmatch"):
             if fishers is None:
-                raise ValueError("fisher merge needs fisher estimates")
+                if not self.strategy.uses_stats:
+                    raise ValueError(f"{cfg.merge} merge needs fisher "
+                                     "estimates or strategy stats")
+                fishers = jax.tree.map(jnp.zeros_like, payload)
+            a = (jnp.ones((cfg.n_nodes,), bool) if active is None
+                 else jnp.asarray(active).astype(bool))
+            fishers = self.strategy.finalize_mass(fishers, a)
+            w = active_weights_traced(self.data_sizes, a)
+            # the strategy owns any weight-folding identity (gradmatch ≡
+            # w-weighted fisher ratio) — fisher_gossip's two psums do the rest
+            fishers = self.strategy.gossip_mass(fishers, w)
             merged = gossip.fisher_gossip(payload, fishers, self.mesh,
                                           self.axis, inner_specs=specs)
         elif cfg.topology == "ring":
@@ -341,19 +397,20 @@ class SwarmEngine:
 
     # -- gated sync ----------------------------------------------------------
 
-    def sync(self, params, val, active=None):
+    def sync(self, params, val, active=None, stats=None):
         """propose → in-graph validate → gate → fused commit. Pure/traceable."""
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
              else jnp.asarray(active).astype(bool))
-        candidate, W = self.propose(params, active)
+        candidate, W, imp = self.propose(params, active, stats=stats)
         metric_local = jnp.where(a, self._veval(params, val), 1.0)
         metric_merged = jnp.where(a, self._veval(candidate, val), 0.0)
         gates = gate_decisions(metric_merged, metric_local,
                                self.cfg.val_threshold) & a
         if self.backend == "host":
             committed = host_commit(params, candidate, W, gates, self.cfg,
-                                    block=self.block, interpret=self.interpret)
+                                    imp=imp, block=self.block,
+                                    interpret=self.interpret)
         else:
             committed = gated_commit(candidate, params, gates)
         return committed, {"gates": gates, "metric_local": metric_local,
@@ -361,28 +418,76 @@ class SwarmEngine:
 
     # -- jitted drivers ------------------------------------------------------
 
-    def _round(self, params, opt_state, batches, val, active=None, step0=0):
+    def _round(self, params, opt_state, batches, val, active=None, step0=0,
+               stats=None):
         """T local steps + one gated sync — a single compiled program."""
-        params, opt_state, train_metrics = self.local_steps(
-            params, opt_state, batches, step0)
-        params, log = self.sync(params, val, active)
-        return params, opt_state, dict(log, train=train_metrics)
+        if stats is None:
+            stats = self.init_stats(params)
+        params, opt_state, stats, train_metrics = self.local_steps(
+            params, opt_state, batches, step0, stats)
+        params, log = self.sync(params, val, active, stats=stats)
+        out = dict(log, train=train_metrics)
+        if stats is not None:
+            out["stats"] = stats
+        return params, opt_state, out
 
     def _run_rounds(self, params, opt_state, batches, val, active=None,
-                    step0=0):
-        """scan over R rounds of [R, T, N, ...] batches; no host round-trips."""
+                    step0=0, stats=None):
+        """scan over R rounds of [R, T, N, ...] batches; no host round-trips.
+
+        Fisher/gradmatch importance accumulators live inside the scan carry,
+        so weighted merges run across all R rounds without ever leaving the
+        device. ``cfg.overlap_sync`` switches to the double-buffered
+        stale-by-one schedule: round k's commit delta is a side value folded
+        in after round k+1's local steps, taking the merge (collective on the
+        gossip backend) off the critical path at the cost of one round of
+        staleness in the consensus signal.
+        """
         t = jax.tree.leaves(batches)[0].shape[1]
+        if stats is None:
+            stats = self.init_stats(params)
+        step0 = jnp.asarray(step0, jnp.int32)
+
+        if not self.cfg.overlap_sync:
+            def body(carry, round_batches):
+                p, o, st, s = carry
+                p, o, st, tm = self.local_steps(p, o, round_batches, s, st)
+                p, log = self.sync(p, val, active, stats=st)
+                return (p, o, st, s + t), (tm, log)
+
+            init = (params, opt_state, stats, step0)
+            (p, o, st, _), (train_metrics, logs) = jax.lax.scan(
+                body, init, batches)
+            if st is not None:   # final accumulators, for chunked callers
+                logs = dict(logs, stats=st)
+            return p, o, train_metrics, logs
 
         def body(carry, round_batches):
-            p, o, s = carry
-            p, o, tm = self.local_steps(p, o, round_batches, s)
-            p, log = self.sync(p, val, active)
-            return (p, o, s + t), (tm, log)
+            p, o, st, s, pending = carry
+            # local steps depend on the previous round's LOCAL params (plus
+            # the already-available stale delta) — never on the in-flight
+            # merge, so the sync below can overlap them on hardware.
+            p_loc, o, st, tm = self.local_steps(p, o, round_batches, s, st)
+            committed, log = self.sync(p_loc, val, active, stats=st)
+            delta = jax.tree.map(lambda c, l: c - l, committed, p_loc)
+            p_next = jax.tree.map(lambda l, d: l + d, p_loc, pending)
+            return (p_next, o, st, s + t, delta), (tm, log)
 
-        init = (params, opt_state, jnp.asarray(step0, jnp.int32))
-        (p, o, _), (train_metrics, logs) = jax.lax.scan(body, init, batches)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        init = (params, opt_state, stats, step0, zeros)
+        (p, o, st, _, pending), (train_metrics, logs) = jax.lax.scan(
+            body, init, batches)
+        # fold in the last round's commit so no accepted merge is dropped
+        p = jax.tree.map(lambda l, d: l + d, p, pending)
+        if st is not None:       # final accumulators, for chunked callers
+            logs = dict(logs, stats=st)
         return p, o, train_metrics, logs
 
-    def _run_local(self, params, opt_state, batches, step0=0):
-        """Sync-free local training over [S, N, ...] batches."""
-        return self.local_steps(params, opt_state, batches, step0)
+    def _run_local(self, params, opt_state, batches, step0=0, stats=None):
+        """Sync-free local training over [S, N, ...] batches. Returns
+        ``(params, opt_state, metrics, stats)`` — stats is None unless
+        importance accumulators were passed in (accumulation only runs when
+        the caller threads them)."""
+        p, o, st, metrics = self.local_steps(params, opt_state, batches,
+                                             step0, stats)
+        return p, o, metrics, st

@@ -14,6 +14,12 @@ Implemented merges (paper §2 taxonomy):
                   cited by the paper as the principled upgrade)
   gradmatch     — uncertainty-based gradient matching (Daheim et al. [6]):
                   Fisher-preconditioned delta correction around a reference
+
+`MergeStrategy` wraps each method as a traceable first-class object with
+``init_stats / accumulate / propose`` hooks, so the compiled swarm engine can
+carry per-node importance statistics through its round scan and hand the
+commit to the fused Pallas kernel — no host round-trips for any method. The
+function forms above remain the numerical ground truth; strategies call them.
 """
 from __future__ import annotations
 
@@ -88,6 +94,21 @@ def gradmatch_merge(stacked, fishers, weights: Optional[jnp.ndarray] = None,
     return jax.tree.map(one, stacked, fishers)
 
 
+def mask_fishers(fishers, active):
+    """Zero departed nodes' Fisher mass so their stale params can't enter
+    fisher/gradmatch merges. The single implementation of that invariant —
+    every path reaches it through `MergeStrategy.finalize_mass` (host bools
+    or traced masks)."""
+    a = jnp.asarray(active)
+
+    def one(f):
+        if f is None:
+            return None
+        return f * a.astype(f.dtype).reshape((f.shape[0],) + (1,) * (f.ndim - 1))
+
+    return jax.tree.map(one, fishers, is_leaf=lambda v: v is None)
+
+
 def merge(stacked, method: str, *, W=None, fishers=None, weights=None):
     if method in ("mean", "fedavg"):
         if W is None:
@@ -101,4 +122,182 @@ def merge(stacked, method: str, *, W=None, fishers=None, weights=None):
         if fishers is None:
             raise ValueError("gradmatch merge needs fisher estimates")
         return gradmatch_merge(stacked, fishers, weights)
+    raise ValueError(f"unknown merge {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# MergeStrategy: the traceable first-class merge abstraction
+# ---------------------------------------------------------------------------
+
+class MergeStrategy:
+    """Traceable merge strategy: ``init_stats`` → ``accumulate`` → ``propose``.
+
+    The engine threads ``stats`` (a stacked pytree of per-node importance
+    accumulators, or None) through its compiled round scan:
+
+      * ``init_stats(stacked)``     zero accumulators matching the params
+        (None for methods that need no statistics);
+      * ``accumulate(stats, old, new, step)`` per-local-step in-graph update;
+      * ``fishers(stats)``          finalize accumulators into the diagonal
+        importance estimates the merge consumes;
+      * ``propose(stacked, W, weights=, fishers=)`` →
+        ``(candidate, W_commit, imp)``: the merge candidate for every node,
+        plus the row-weight matrix and optional per-leaf importance pytree
+        the fused Pallas commit re-contracts with. ``imp is None`` means the
+        candidate is a plain W-row mix (mean/fedavg).
+
+    Everything is pure jax — a strategy can run inside ``jit``/``scan``/
+    ``shard_map`` with traced inputs. Candidates are computed by the module's
+    function forms (``mix`` / ``fisher_merge`` / ``gradmatch_merge``) so the
+    strategy path is numerically identical to ``merge(...)``.
+    """
+
+    method = "mean"
+    uses_stats = False
+
+    def init_stats(self, stacked):
+        """Per-node importance accumulators (None: method needs none)."""
+        return None
+
+    def accumulate(self, stats, old_params, new_params, step):
+        """In-graph per-step stats update. Default: no-op."""
+        return stats
+
+    def fishers(self, stats):
+        """Finalize accumulators into diagonal importance estimates."""
+        return stats
+
+    def gossip_mass(self, fishers, weights):
+        """Per-node importance mass for the collective (psum) realization —
+        the one place any weight-folding identity lives for the SPMD path."""
+        return fishers
+
+    def finalize_mass(self, fishers, active=None):
+        """Mask-then-finalize, in that order: a departed node's (possibly
+        huge) stale mass must be zeroed BEFORE normalization, or it drags
+        the normalization mean and drowns the survivors in the eps floor.
+        Every merge path (engine host, engine gossip, SwarmLearner) calls
+        this instead of hand-sequencing the two steps."""
+        if fishers is None:
+            return None
+        if active is not None:
+            fishers = mask_fishers(fishers, active)
+        return self.fishers(fishers)
+
+    def propose(self, stacked, W, *, weights=None, fishers=None):
+        raise NotImplementedError
+
+
+class MixStrategy(MergeStrategy):
+    """mean / fedavg: candidate is the mixing-matrix contraction; the fused
+    commit re-contracts the same W rows (no importance weights)."""
+
+    def __init__(self, method: str = "fedavg"):
+        self.method = method
+
+    def propose(self, stacked, W, *, weights=None, fishers=None):
+        return mix(stacked, W), W, None
+
+
+class FisherStrategy(MergeStrategy):
+    """Diagonal-Fisher-weighted merging with in-graph mass accumulation.
+
+    Without an explicit Fisher (squared-gradient) estimate, the accumulator
+    is a decayed sum of squared parameter deltas: F ← γF + (θ_{t+1} − θ_t)².
+    Under SGD-like updates this is lr²·ĝ² — a curvature proxy whose uniform
+    scale cancels in the merge ratio Σ F_i θ_i / Σ F_i, so it needs no loss
+    re-evaluation or extra backward pass inside the compiled round. Caveat:
+    under adaptive optimizers (AdamW) the per-step delta is ~lr regardless
+    of gradient scale, so the proxy flattens toward uniform and the merge
+    approaches fedavg; pass exact squared-gradient estimates through the
+    explicit ``fishers=`` channel when curvature weighting matters (see the
+    ROADMAP true-Fisher accumulation hook).
+    """
+
+    method = "fisher"
+    uses_stats = True
+
+    def __init__(self, decay: float = 0.95, eps: float = 1e-8):
+        self.decay = decay
+        self.eps = eps
+
+    def init_stats(self, stacked):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), stacked)
+
+    def accumulate(self, stats, old_params, new_params, step):
+        def one(s, po, pn):
+            d = (pn - po).astype(jnp.float32)
+            return self.decay * s + d * d
+
+        return jax.tree.map(one, stats, old_params, new_params)
+
+    def fishers(self, stats):
+        """Normalize accumulated mass to a global mean of 1. The merge ratio
+        is scale-free, so this changes nothing when mass is already O(1) —
+        it only keeps the lr²-scaled Δθ² proxy from drowning in the eps
+        floor (tiny lr would otherwise collapse the merge to a uniform mean
+        and re-admit `mask_fishers`-zeroed departed nodes)."""
+        leaves = jax.tree.leaves(stats)
+        total = sum(leaf.sum() for leaf in leaves)
+        count = sum(leaf.size for leaf in leaves)
+        mean = total / count
+        scale = jnp.where(mean > 0, 1.0 / jnp.maximum(mean, 1e-30), 1.0)
+        return jax.tree.map(lambda leaf: leaf * scale, stats)
+
+    def _imp(self, stacked, fishers, weights):
+        """Per-leaf importance for the fused commit: c_j·(F_j + eps)."""
+        return jax.tree.map(lambda f: f.astype(jnp.float32) + self.eps, fishers)
+
+    def _rows(self, n, weights):
+        return jnp.ones((n, n), jnp.float32)
+
+    def propose(self, stacked, W, *, weights=None, fishers=None):
+        if fishers is None:
+            fishers = jax.tree.map(jnp.ones_like, stacked)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        candidate = self._merge(stacked, fishers, weights)
+        return candidate, self._rows(n, weights), self._imp(stacked, fishers,
+                                                            weights)
+
+    def _merge(self, stacked, fishers, weights):
+        return fisher_merge(stacked, fishers, eps=self.eps)
+
+
+class GradMatchStrategy(FisherStrategy):
+    """Uncertainty-based gradient matching. Algebraically
+    θ* = θ̄ + Σ w(F/F̄ − 1)(θ − θ̄) = Σ w_j F_j θ_j / Σ w_j F_j — a
+    dataset-weighted Fisher ratio — so the fused commit reuses the
+    importance-weighted kernel with w_j folded into the row weights."""
+
+    method = "gradmatch"
+
+    def _rows(self, n, weights):
+        w = (jnp.full((n,), 1.0 / n, jnp.float32) if weights is None
+             else jnp.asarray(weights, jnp.float32))
+        return jnp.broadcast_to(w[None, :], (n, n))
+
+    def _merge(self, stacked, fishers, weights):
+        return gradmatch_merge(stacked, fishers, weights, eps=self.eps)
+
+    def gossip_mass(self, fishers, weights):
+        """Fold w_j into the mass so `fisher_gossip`'s two psums realize the
+        weighted ratio — the identity's single home on the SPMD path."""
+        w = jnp.asarray(weights, jnp.float32)
+
+        def one(f):
+            return f * w.reshape((f.shape[0],) + (1,) * (f.ndim - 1))
+
+        return jax.tree.map(one, fishers)
+
+
+def get_strategy(cfg) -> MergeStrategy:
+    """SwarmConfig → MergeStrategy (the single merge-method dispatch)."""
+    method = cfg.merge
+    if method in ("mean", "fedavg"):
+        return MixStrategy(method)
+    decay = getattr(cfg, "fisher_decay", 0.95)
+    if method == "fisher":
+        return FisherStrategy(decay=decay)
+    if method == "gradmatch":
+        return GradMatchStrategy(decay=decay)
     raise ValueError(f"unknown merge {method!r}")

@@ -9,9 +9,11 @@ The paper's loop (§3.1):
 
 ``SwarmLearner`` is the host-simulated N-node swarm that accepts **arbitrary
 Python** ``train_step_fn``/``eval_fn`` callables (multi-arch examples, tests).
-Its merge math delegates to `repro.core.engine`: propose runs as one jitted
-program and the commit goes through the fused Pallas merge kernel — only the
-user eval calls stay on the host.
+Its merge math delegates to `repro.core.engine` and the configured
+`merge_impl.MergeStrategy`: propose runs as one jitted program, Fisher mass
+for fisher/gradmatch merges accumulates automatically during ``local_steps``
+(no caller-side estimation loop), and every commit goes through the fused
+Pallas merge kernel — only the user eval calls stay on the host.
 
 Fully-traceable workloads (the paper repro in `experiments/histo`, the CLI
 swarm path, benchmarks) should use `repro.core.engine.SwarmEngine` directly:
@@ -45,7 +47,8 @@ class NodeState:
     params: Any
     opt_state: Any
     data_size: int
-    fisher: Any = None
+    fisher: Any = None        # explicit importance estimate; never mutated
+    fisher_stats: Any = None  # strategy-accumulated Δθ² mass (local_steps)
     active: bool = True
     history: list = field(default_factory=list)
 
@@ -69,13 +72,28 @@ class SwarmLearner:
     def n(self) -> int:
         return len(self.nodes)
 
+    @property
+    def strategy(self):
+        return merge_lib.get_strategy(self.cfg)
+
     def local_steps(self, batches_per_node: Sequence[Any]):
-        """One local step on every active node."""
+        """One local step on every active node. For fisher/gradmatch merges
+        the strategy accumulates each node's importance mass here (into
+        ``node.fisher_stats``) — callers no longer estimate Fishers
+        themselves. An explicitly set ``node.fisher`` (true squared-gradient
+        estimates) is never touched and takes precedence at sync."""
+        strategy = self.strategy
         for node, batch in zip(self.nodes, batches_per_node):
             if not node.active or batch is None:
                 continue
+            old_params = node.params
             node.params, node.opt_state, metrics = self.train_step_fn(
                 node.params, node.opt_state, batch, self.step)
+            if strategy.uses_stats:
+                if node.fisher_stats is None:
+                    node.fisher_stats = strategy.init_stats(old_params)
+                node.fisher_stats = strategy.accumulate(
+                    node.fisher_stats, old_params, node.params, self.step)
             node.history.append({k: float(v) for k, v in metrics.items()})
         self.step += 1
 
@@ -90,16 +108,31 @@ class SwarmLearner:
         sizes = [n.data_size for n in self.nodes]
         W = mixing_matrix(self.cfg, sizes, active=active)
         stacked = merge_lib.stack_params([n.params for n in self.nodes])
+        strategy = self.strategy
         fishers = None
-        if self.cfg.merge in ("fisher", "gradmatch"):
-            fishers = merge_lib.stack_params([
+        if strategy.uses_stats:
+            # explicit node.fisher wins over accumulated stats; a node with
+            # neither gets ZERO mass (≈ excluded) — a ones_like default
+            # would dwarf the lr²-scaled Δθ² mass of the trained nodes and
+            # hand the merge to the untrained node
+            masses = [
                 n.fisher if n.fisher is not None
-                else jax.tree.map(jnp.ones_like, n.params)
-                for n in self.nodes])
-            fishers = engine_lib.mask_fishers(fishers, np.asarray(active))
+                else (n.fisher_stats if n.fisher_stats is not None
+                      else jax.tree.map(jnp.zeros_like, n.params))
+                for n in self.nodes]
+            has_explicit = [n.fisher is not None for n in self.nodes]
+            if any(has_explicit) and not all(has_explicit):
+                # mixed sources: explicit squared-grad Fishers (~O(1)) and
+                # the Δθ² proxy (~lr²) are on incomparable scales — one
+                # explicit node would swallow the merge. Normalize each
+                # node's mass to mean 1 first; per-element relative
+                # importance survives, the source-scale mismatch doesn't.
+                masses = [strategy.fishers(m) for m in masses]
+            fishers = merge_lib.stack_params(masses)
+            fishers = strategy.finalize_mass(fishers, np.asarray(active))
         weights = active_weights(sizes, active)
-        candidate = engine_lib.propose_host(stacked, self.cfg, W,
-                                            fishers=fishers, weights=weights)
+        candidate, W_eff, imp = engine_lib.propose_host(
+            stacked, self.cfg, W, fishers=fishers, weights=weights)
         cand_nodes = merge_lib.unstack_params(candidate, self.n)
 
         metric_local, metric_merged = [], []
@@ -115,8 +148,8 @@ class SwarmLearner:
             self.cfg.val_threshold, mode="relative"))
         gates &= np.asarray(active)
 
-        committed = engine_lib.commit_host(stacked, candidate, W, gates,
-                                           self.cfg)
+        committed = engine_lib.commit_host(stacked, candidate, W_eff, gates,
+                                           self.cfg, imp=imp)
         for i, node in enumerate(self.nodes):
             node.params = jax.tree.map(lambda x, i=i: x[i], committed)
         log = {"step": self.step, "gates": gates.tolist(),

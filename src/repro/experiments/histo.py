@@ -138,8 +138,11 @@ def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
     """Train nodes (swarm if swarm_cfg else isolated). Returns node params.
 
     Runs on `SwarmEngine`: the whole sync round — `sync_every` vmapped local
-    steps, in-graph AUC gate, fused Pallas commit — is one compiled program;
-    `run_rounds` scans over rounds with zero host round-trips.
+    steps, in-graph sort-based AUC gate, fused Pallas commit — is one
+    compiled program; `run_rounds` scans over rounds with zero host
+    round-trips. The swarm config's merge method (including fisher/gradmatch
+    with in-graph importance accumulation) and `overlap_sync` double-buffered
+    rounds are handled entirely inside the engine.
     """
     key = jax.random.key(ecfg.seed + 42)   # shared init = warm-start effect
     n = len(shards)
@@ -166,7 +169,7 @@ def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
 
     sync_log = []
     if swarm_cfg is None or cfg.sync_every > ecfg.steps:
-        stacked, opt, _ = eng.run_local(
+        stacked, opt, _, _ = eng.run_local(
             stacked, opt, (jnp.asarray(xs), jnp.asarray(ys)), 0)
     else:
         t = cfg.sync_every
@@ -175,7 +178,7 @@ def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
                 jnp.asarray(ys[:rounds * t]).reshape((rounds, t) + ys.shape[1:]))
         stacked, opt, _, logs = eng.run_rounds(stacked, opt, head, val, None, 0)
         if ecfg.steps % t:
-            stacked, opt, _ = eng.run_local(
+            stacked, opt, _, _ = eng.run_local(
                 stacked, opt,
                 (jnp.asarray(xs[rounds * t:]), jnp.asarray(ys[rounds * t:])),
                 rounds * t)

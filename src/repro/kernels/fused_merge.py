@@ -19,9 +19,20 @@ Two entry points:
                            rows — (N + N)·BLOCK bytes per column block, still
                            the roofline minimum.
 
+``fused_merge_all`` optionally takes per-element importance weights
+``imp [N, D]`` (diagonal Fisher mass). The merged row then becomes the
+normalized importance-weighted mean
+
+    out[i] = gate_i ?  Σ_j W[i,j]·imp[j]⊙θ_j / Σ_j W[i,j]·imp[j]  :  θ_i
+
+which covers fisher merging (W = 1) and gradient matching (W rows = dataset
+weights; the gradmatch correction collapses algebraically to this ratio) in
+the same single VMEM pass — (2N + N)·BLOCK bytes per column block instead of
+the ~6N·BLOCK an unfused numerator/denominator/select chain moves.
+
 ``fused_merge_tree`` maps either entry point leaf-wise over a stacked param
-pytree (2-D ``weights`` selects the all-nodes form); the host-simulated swarm
-engine commits through it.
+pytree (2-D ``weights`` selects the all-nodes form, ``imp=`` a matching
+importance pytree); the host-simulated swarm engine commits through it.
 """
 from __future__ import annotations
 
@@ -91,54 +102,88 @@ def _merge_all_kernel(x_ref, w_ref, g_ref, o_ref):
     o_ref[...] = jnp.where(gate, merged, self_row)[None].astype(o_ref.dtype)
 
 
+def _merge_all_imp_kernel(x_ref, f_ref, w_ref, g_ref, o_ref):
+    """Importance-weighted form: x/f [N, B] tiles; w [1, N] row of node i;
+    g [1]; o [1, B].  merged = Σ_j w_j f_j x_j / Σ_j w_j f_j  per element."""
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)              # [N, B]
+    f = f_ref[...].astype(jnp.float32)              # [N, B]
+    w = w_ref[...].astype(jnp.float32)[0]           # [N]
+    wf = f * w[:, None]
+    num = jnp.einsum("nb,nb->b", wf, x)
+    den = wf.sum(0)
+    merged = num / jnp.maximum(den, 1e-30)
+    self_row = jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False)
+    gate = g_ref[0] != 0
+    o_ref[...] = jnp.where(gate, merged, self_row)[None].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def fused_merge_all(stacked, W, gates, *, block: int = DEFAULT_BLOCK,
+def fused_merge_all(stacked, W, gates, imp=None, *, block: int = DEFAULT_BLOCK,
                     interpret: bool = False):
     """stacked [N, D] → committed [N, D]:  out[i] = gate[i] ? Σ_j W[i,j] θ_j : θ_i.
 
     W: [N, N] row-stochastic mixing matrix; gates: [N] acceptance bits. The
     node axis is the innermost grid dimension, so each [N, BLOCK] tile is
     loaded once and serves every node's output row.
+
+    imp: optional [N, D] per-element importance weights — switches to the
+    normalized weighted merge  Σ_j W[i,j]·imp[j]⊙θ_j / Σ_j W[i,j]·imp[j]
+    (fisher / gradmatch commits), still one pass over the tile.
     """
     n, d = stacked.shape
     block = min(block, max(128, d))
     pad = (-d) % block
     if pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        if imp is not None:
+            imp = jnp.pad(imp, ((0, 0), (0, pad)))
     dp = d + pad
 
+    tile_spec = pl.BlockSpec((n, block), lambda j, i: (0, j))
+    operands = [stacked]
+    in_specs = [tile_spec]
+    if imp is not None:  # same tiling, one extra [N, B] importance stream
+        operands.append(jnp.asarray(imp, jnp.float32))
+        in_specs.append(tile_spec)
+    operands += [jnp.asarray(W, jnp.float32),
+                 jnp.asarray(gates).astype(jnp.int32)]
+    in_specs += [pl.BlockSpec((1, n), lambda j, i: (i, 0)),
+                 pl.BlockSpec((1,), lambda j, i: (i,))]
+
     out = pl.pallas_call(
-        _merge_all_kernel,
+        _merge_all_kernel if imp is None else _merge_all_imp_kernel,
         grid=(dp // block, n),
-        in_specs=[
-            pl.BlockSpec((n, block), lambda j, i: (0, j)),
-            pl.BlockSpec((1, n), lambda j, i: (i, 0)),
-            pl.BlockSpec((1,), lambda j, i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block), lambda j, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, dp), stacked.dtype),
         interpret=interpret,
-    )(stacked, jnp.asarray(W, jnp.float32),
-      jnp.asarray(gates).astype(jnp.int32))
+    )(*operands)
     return out[:, :d]
 
 
-def fused_merge_tree(stacked_tree, weights, self_idx, gate, **kw):
+def fused_merge_tree(stacked_tree, weights, self_idx, gate, imp=None, **kw):
     """Apply the kernel leaf-wise over a stacked param pytree.
 
     weights [N] + scalar gate → one node's view ([D]-shaped leaves);
     weights [N, N] + gate [N] → the all-nodes commit (stacked leaves preserved;
-    ``self_idx`` is ignored — each row is its own self).
+    ``self_idx`` is ignored — each row is its own self). ``imp``: optional
+    pytree of per-element importance weights matching ``stacked_tree``
+    (fisher/gradmatch; all-nodes form only).
     """
     all_nodes = jnp.ndim(weights) == 2
 
-    def one(x):
+    def one(x, f=None):
         if x is None:
             return None
         n = x.shape[0]
         flat = x.reshape(n, -1)
         if all_nodes:
-            return fused_merge_all(flat, weights, gate, **kw).reshape(x.shape)
+            fflat = None if f is None else jnp.asarray(f).reshape(n, -1)
+            return fused_merge_all(flat, weights, gate, fflat,
+                                   **kw).reshape(x.shape)
         return fused_merge(flat, weights, self_idx, gate, **kw).reshape(x.shape[1:])
 
-    return jax.tree.map(one, stacked_tree, is_leaf=lambda v: v is None)
+    if imp is None:
+        return jax.tree.map(one, stacked_tree, is_leaf=lambda v: v is None)
+    return jax.tree.map(one, stacked_tree, imp, is_leaf=lambda v: v is None)

@@ -103,9 +103,9 @@ def make_swarm_sync_step(swarm_cfg: SwarmConfig, mesh, axis: str,
                          backend="gossip", mesh=mesh, axis=axis,
                          param_specs=param_specs)
 
-    def propose(stacked_params, active=None, fishers=None):
-        candidate, _ = engine.propose(stacked_params, active=active,
-                                      fishers=fishers)
+    def propose(stacked_params, active=None, fishers=None, stats=None):
+        candidate, _, _ = engine.propose(stacked_params, active=active,
+                                         fishers=fishers, stats=stats)
         return candidate
 
     def commit(candidate, local_params, metric_merged, metric_local):
@@ -212,6 +212,9 @@ def main():
                            lora_only=args.lora)
         engine = SwarmEngine(scfg, train_step, eval_fn,
                              data_sizes=[len(s["tokens"]) for s in streams])
+        # fisher/gradmatch: importance accumulators ride along every engine
+        # call — estimation is in-graph, no host-side Fisher loop
+        stats = engine.init_stats(stacked)
         vals = {k: jnp.asarray(np.stack([s[k][:8] for s in streams]))
                 for k in streams[0]}
 
@@ -230,7 +233,8 @@ def main():
             block = draw(t)
             if t == args.sync_every:  # full round: local steps + gated sync
                 stacked, opts, out = engine.round(stacked, opts, block, vals,
-                                                  None, final_step)
+                                                  None, final_step, stats)
+                stats = out.pop("stats", None)
                 losses = np.asarray(out["train"]["loss"])[-1]
                 gates = np.asarray(out["gates"]).astype(bool).tolist()
                 sync_log.append({
@@ -239,8 +243,8 @@ def main():
                     "metric_merged": np.asarray(out["metric_merged"]).tolist()})
                 extra = f" sync gates={gates}"
             else:  # remainder steps, no sync
-                stacked, opts, tm = engine.run_local(stacked, opts, block,
-                                                     final_step)
+                stacked, opts, tm, stats = engine.run_local(
+                    stacked, opts, block, final_step, stats)
                 losses = np.asarray(tm["loss"])[-1]
                 extra = ""
             final_step += t

@@ -1,0 +1,55 @@
+"""`benchmarks/run.py --smoke` must keep working: every benchmark family has
+a seconds-scale entry point, so the harness can't silently rot. One
+subprocess runs the whole smoke suite; assertions read its CSV output."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def smoke_out():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "run.py"),
+         "--smoke"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_smoke_emits_csv_without_errors(smoke_out):
+    lines = [l for l in smoke_out.strip().splitlines() if l]
+    assert lines[0] == "name,us_per_call,derived"
+    assert len(lines) > 8
+    assert all(len(l.split(",", 2)) == 3 for l in lines[1:])
+    assert "ERROR" not in smoke_out
+
+
+def test_smoke_covers_weighted_kernel(smoke_out):
+    assert "merge_fused_weighted_validated" in smoke_out
+
+
+def test_smoke_covers_spmd_parity(smoke_out):
+    """Gossip-vs-host engine parity numbers (wall time, committed-params
+    diff, collective bytes) are part of the benchmark output."""
+    assert "spmd_parity_host_round_us" in smoke_out
+    assert "spmd_parity_gossip_round_us" in smoke_out
+    assert "spmd_parity_collective_bytes_per_sync" in smoke_out
+    for line in smoke_out.splitlines():
+        if line.startswith("spmd_parity_max_abs_diff"):
+            assert float(line.split(",")[2]) < 1e-4
+            break
+    else:
+        raise AssertionError("no parity diff row")
+
+
+def test_smoke_covers_overlap_round(smoke_out):
+    assert "engine_round_serial_us" in smoke_out
+    assert "engine_round_overlap_us" in smoke_out
+    assert "overlap_vs_serial_ratio" in smoke_out

@@ -145,6 +145,54 @@ def test_macro_auc_traced_matches_host(seed):
     assert abs(got - macro_auc(probs, labels)) < 1e-5
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_macro_auc_sorted_matches_pairwise(seed):
+    """The sort-based traced AUC == the old O(V²) pairwise form on small
+    inputs (many ties forced by coarse rounding, random padding masks)."""
+    from repro.metrics import _macro_auc_pairwise, macro_auc_traced
+    rng = np.random.default_rng(100 + seed)
+    v = 29
+    probs = np.round(rng.random((v, 4)), 1)
+    labels = rng.integers(0, 4, v)
+    mask = rng.random(v) > 0.2
+    got = float(macro_auc_traced(jnp.asarray(probs), jnp.asarray(labels),
+                                 jnp.asarray(mask)))
+    want = float(_macro_auc_pairwise(jnp.asarray(probs), jnp.asarray(labels),
+                                     jnp.asarray(mask)))
+    assert abs(got - want) < 1e-6
+
+
+def test_macro_auc_traced_degenerate_single_class():
+    """All-one-class labels: every one-vs-rest AUC is degenerate -> 0.5,
+    matching the host metric (and not NaN)."""
+    from repro.metrics import macro_auc, macro_auc_traced
+    rng = np.random.default_rng(0)
+    probs = rng.random((20, 3))
+    labels = np.full(20, 1)
+    got = float(macro_auc_traced(jnp.asarray(probs), jnp.asarray(labels)))
+    assert got == pytest.approx(macro_auc(probs, labels)) == 0.5
+    # fully-masked input: no class present -> 0.0, bit-matching the old
+    # pairwise traced form (the engine's active mask handles such nodes)
+    from repro.metrics import _macro_auc_pairwise
+    mask = jnp.zeros(20, bool)
+    got = float(macro_auc_traced(jnp.asarray(probs), jnp.asarray(labels),
+                                 mask))
+    assert got == float(_macro_auc_pairwise(jnp.asarray(probs),
+                                            jnp.asarray(labels), mask)) == 0.0
+
+
+def test_macro_auc_traced_randomized_large():
+    """Acceptance: sort-based AUC within 1e-6 of the host metric on
+    randomized inputs big enough that the pairwise form would be O(V²)."""
+    from repro.metrics import macro_auc, macro_auc_traced
+    rng = np.random.default_rng(7)
+    v = 2500
+    probs = rng.random((v, 3)).astype(np.float32)
+    labels = rng.integers(0, 3, v)
+    got = float(macro_auc_traced(jnp.asarray(probs), jnp.asarray(labels)))
+    assert abs(got - macro_auc(probs, labels)) < 1e-6
+
+
 def test_engine_run_rounds_reaches_consensus():
     """Full-topology fedavg commit pulls all nodes onto one iterate."""
     train_step, eval_fn = _toy_fns()

@@ -76,6 +76,22 @@ np.testing.assert_allclose(np.asarray(out), np.asarray(fisher_merge(x, f)["w"]),
                            rtol=1e-5, atol=1e-6)
 print("OK fisher")
 
+# --- gradmatch via the engine gossip backend == host gradmatch merge -----
+from repro.core.engine import SwarmEngine
+from repro.core.merge_impl import gradmatch_merge
+gm_mesh = jax.make_mesh((4,), ("gnode",), devices=jax.devices()[:4])
+sizes = [1.0, 3.0, 3.0, 3.0]
+gcfg = SwarmConfig(n_nodes=4, topology="full", merge="gradmatch",
+                   lora_only=False)
+geng = SwarmEngine(gcfg, None, None, data_sizes=sizes, backend="gossip",
+                   mesh=gm_mesh, axis="gnode")
+cand, _, _ = jax.jit(lambda p, ff: geng.propose(p, fishers=ff))(x, f)
+w = jnp.asarray(np.asarray(sizes) / np.sum(sizes), jnp.float32)
+np.testing.assert_allclose(np.asarray(cand["w"]),
+                           np.asarray(gradmatch_merge(x, f, w)["w"]),
+                           rtol=1e-5, atol=1e-6)
+print("OK gradmatch_gossip")
+
 # --- full SPMD swarm step: vmapped train + gossip + gated commit --------
 cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                   d_ff=128, vocab_size=128)
@@ -155,6 +171,12 @@ def test_matrix_gossip_dynamic_membership(spmd_out):
 
 def test_fisher_gossip_matches_host_merge(spmd_out):
     assert "OK fisher" in spmd_out
+
+
+def test_gradmatch_engine_gossip_matches_host_merge(spmd_out):
+    """The engine's gossip backend realizes gradmatch as the weighted-fisher
+    psum ratio — must equal the host `gradmatch_merge` closed form."""
+    assert "OK gradmatch_gossip" in spmd_out
 
 
 def test_swarm_spmd_train_and_sync_step(spmd_out):
