@@ -16,6 +16,9 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
   sync_roundtrip    host-sim 4-node sync wall time (propose+gate+commit)
   engine_roundtrip  jitted stacked engine round (local steps + gated sync)
   overlap_roundtrip double-buffered stale-by-one rounds vs serial rounds
+  dynamic_membership SwarmSession join/leave schedule: wall time per round +
+                    retrace count (must stay at the single warmup trace —
+                    membership is runtime data in the compiled round)
   spmd_parity       full SwarmEngine(backend="gossip") round vs the host
                     backend on a forced CPU device mesh (subprocess):
                     wall time + estimated collective bytes per sync
@@ -293,6 +296,61 @@ def overlap_roundtrip(reps: int = 10):
     print(f"overlap_vs_serial_ratio,0,{times[True] / times[False]:.3f}")
 
 
+def dynamic_membership(rounds_per_phase: int = 4, d: int = 128):
+    """ROADMAP dynamic-membership scenario: a join→leave→rejoin schedule
+    driven through `SwarmSession.round` — wall time per round plus the
+    retrace count across the whole schedule (the compiled round must be
+    traced exactly once; membership flips are pure state updates)."""
+    from repro.configs.base import SwarmConfig
+    from repro.core.session import SwarmSession
+
+    rng = np.random.default_rng(0)
+    n, t = 4, 4
+    traces = []
+
+    def train_step(p, o, b, s):
+        traces.append(1)  # python body runs once per (re)trace only
+        g = jnp.tanh(p["w"] @ p["w"].T) * 1e-3
+        return {"w": p["w"] - g}, {"m": o["m"] + g}, {"loss": jnp.sum(g * g)}
+
+    def eval_fn(p, v):
+        return 1.0 - 0.0 * jnp.sum(p["w"])
+
+    w0 = jnp.asarray(rng.normal(0, 0.1, (d, d)), jnp.float32)
+    sess = SwarmSession(
+        SwarmConfig(n_nodes=n, sync_every=t, topology="dynamic",
+                    merge="fedavg", lora_only=False, val_threshold=0.0),
+        train_step, eval_fn, params={"w": w0},
+        opt_state={"m": jnp.zeros_like(w0)}, data_sizes=[1.0] * n)
+    batches = jnp.zeros((t, n, 1))
+    val = jnp.zeros((n, 1))
+
+    # schedule: all-active -> node 3 leaves -> node 3 rejoins & node 1 leaves
+    phases = [lambda: None, lambda: sess.leave(3),
+              lambda: (sess.join(3), sess.leave(1))]
+    sess.round(batches, val)  # warmup: the one and only trace/compile
+    warmup_traces = len(traces)
+    t0 = time.perf_counter()
+    n_rounds = 0
+    for phase in phases:
+        phase()
+        for _ in range(rounds_per_phase):
+            out = sess.round(batches, val)
+            n_rounds += 1
+    jax.block_until_ready(out["gates"])
+    us = (time.perf_counter() - t0) / n_rounds * 1e6
+    print(f"dynamic_membership_round_us,{us:.1f},"
+          f"{n_rounds}rounds_join_leave_rejoin")
+    print(f"dynamic_membership_retraces,0,"
+          f"{len(traces) - warmup_traces}")
+    print(f"dynamic_membership_final_active,0,"
+          f"{''.join(str(int(b)) for b in sess.active)}")
+
+
+def dynamic_membership_smoke():
+    dynamic_membership(rounds_per_phase=2, d=32)
+
+
 def _spmd_parity_inner(n: int, t: int, d: int, reps: int):
     """Runs inside the forced-device-count subprocess: one full engine round
     per backend (host vs gossip) on identical state, timed + compared."""
@@ -387,11 +445,13 @@ def overlap_roundtrip_smoke():
 
 ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
-       sync_roundtrip, engine_roundtrip, overlap_roundtrip, spmd_parity]
+       sync_roundtrip, engine_roundtrip, overlap_roundtrip,
+       dynamic_membership, spmd_parity]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
-         engine_roundtrip, overlap_roundtrip_smoke, spmd_parity_smoke]
+         engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
+         spmd_parity_smoke]
 
 
 def roofline_table():

@@ -1,10 +1,13 @@
-"""The jitted stacked swarm engine in ~50 lines.
+"""The compiled swarm session in ~50 lines.
 
-Where quickstart.py drives a Python loop over nodes (`SwarmLearner`), this
-example hands the whole P2P-SL schedule to `SwarmEngine.run_rounds`: every
-round — `sync_every` vmapped local steps, in-graph validation of local and
-merged params, the 80% gate, and the fused Pallas commit — is part of ONE
-compiled program; rounds are scanned with zero host round-trips.
+Where quickstart.py drives arbitrary Python callables (`backend="host"`),
+this example hands the whole P2P-SL schedule to the default engine backend
+of `SwarmSession.run_rounds`: every round — `sync_every` vmapped local
+steps, in-graph validation of local and merged params, the 80% gate, and
+the fused Pallas commit — is part of ONE compiled program; rounds are
+scanned with zero host round-trips. Mid-run membership changes
+(`session.leave` / `session.join`) are pure state updates: the second
+`run_rounds` call below reuses the already-compiled round.
 
 Run:  PYTHONPATH=src python examples/engine_swarm.py
 """
@@ -13,8 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, SwarmConfig, TrainConfig
-from repro.core import merge_impl as merge_lib
-from repro.core.engine import SwarmEngine
+from repro.core.session import SwarmSession
 from repro.data import make_lm_stream
 from repro.launch.train import make_train_step
 from repro.models import build_model
@@ -46,24 +48,29 @@ def main():
     vals = {k: jnp.asarray(np.stack([s[k][:8] for s in streams]))
             for k in streams[0]}
     params = model.init(jax.random.key(0))
-    stacked = merge_lib.stack_params([params] * n_nodes)
-    opts = merge_lib.stack_params([adamw_init(params)] * n_nodes)
 
-    engine = SwarmEngine(
+    session = SwarmSession(
         SwarmConfig(n_nodes=n_nodes, sync_every=sync_every, topology="full",
                     merge="fedavg", lora_only=False, val_threshold=0.8),
         lambda p, o, b, s: base_step(p, o, b),
         lambda p, v: 1.0 / (1.0 + model.loss_fn(p, v, remat=False)[0]),
+        params=params, opt_state=adamw_init(params),
         data_sizes=[len(s["tokens"]) for s in streams])
 
-    stacked, opts, train_ms, logs = engine.run_rounds(
-        stacked, opts, block(sync_every), vals, None, 0)
-
-    losses = np.asarray(train_ms["loss"])          # [rounds, T, N]
+    logs = session.run_rounds(block(sync_every), vals)
+    losses = np.asarray(logs["train"]["loss"])     # [rounds, T, N]
     for r in range(rounds):
         print(f"round {r}: loss={[f'{l:.3f}' for l in losses[r, -1]]} "
               f"gates={np.asarray(logs['gates'][r]).astype(bool).tolist()}")
-    print("OK — every round above ran as one compiled engine call.")
+
+    # dynamic membership: node 3 drops out; the SAME compiled round serves
+    # the new configuration (active mask is runtime data, zero retraces)
+    session.leave(3)
+    logs = session.run_rounds(block(sync_every), vals)
+    print(f"node 3 left: gates={np.asarray(logs['gates'][-1]).tolist()} "
+          f"(round {int(session.state.round)}, step {int(session.state.step)})")
+    session.join(3)
+    print("OK — every round above ran as one compiled session call.")
 
 
 if __name__ == "__main__":

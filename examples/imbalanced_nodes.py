@@ -11,7 +11,8 @@ example does, comparing on the same biased-shard setup:
   gradmatch/full uncertainty-based gradient matching [Daheim et al., cited]
 
 Also demonstrates DYNAMIC MEMBERSHIP: node 3 leaves the swarm mid-training
-and re-joins later (the paper's §3.1 join/leave semantics).
+via ``session.leave(3)`` and re-joins later via ``session.join(3)`` (the
+paper's §3.1 join/leave semantics — runtime state, not reconfiguration).
 
 Note on fisher/gradmatch here: importance mass comes from the strategy's
 in-graph Δθ² accumulation (no host-side Fisher loop). Because this example
@@ -30,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig, TrainConfig
-from repro.core.swarm import NodeState, SwarmLearner
+from repro.core.session import SwarmSession
 from repro.data import batches, make_histo_dataset, shard_to_nodes
 from repro.metrics import classify_report
 from repro.models.cnn import bce_loss, forward_cnn, init_cnn
@@ -72,38 +73,42 @@ def run(swarm_cfg, steps, dynamic=False, seed=0):
         return classify_report(np.asarray(predict(params, jnp.asarray(x))),
                                y)["auc"]
 
-    key = jax.random.key(42)
-    nodes = [NodeState(params=init_cnn(key, None, growth=8, stem=16,
-                                       feat_dim=96, hidden=32),
-                       opt_state=None, data_size=len(s[1])) for s in shards]
-    for n in nodes:
-        n.opt_state = adamw_init(n.params)
-    sw = SwarmLearner(swarm_cfg, train_step, eval_fn, nodes)
+    params = init_cnn(jax.random.key(42), None, growth=8, stem=16,
+                      feat_dim=96, hidden=32)
+    sw = SwarmSession(swarm_cfg, train_step, eval_fn, backend="host",
+                      params=params, opt_state=adamw_init(params),
+                      data_sizes=[len(s[1]) for s in shards])
 
     rngs = [np.random.default_rng(seed * 10 + i) for i in range(4)]
     iters = [iter(()) for _ in range(4)]
     vals = [(s[0][:48], s[1][:48]) for s in shards]
-    for step in range(steps):
-        if dynamic:  # node 3 leaves at 1/3, rejoins at 2/3
-            sw.set_active(3, not (steps // 3 <= step < 2 * steps // 3))
-        bs = []
-        for i, s in enumerate(shards):
-            if not sw.nodes[i].active:
-                bs.append(None)
-                continue
-            try:
-                b = next(iters[i])
-            except StopIteration:
-                iters[i] = batches(s[0], s[1], 16, rngs[i])
-                b = next(iters[i])
-            bs.append(b)
-        # fisher/gradmatch importance mass accumulates inside local_steps
+    t = swarm_cfg.sync_every
+    for round_start in range(0, steps, t):
+        if dynamic:  # node 3 leaves at 1/3, rejoins at 2/3 of the run
+            if steps // 3 <= round_start < 2 * steps // 3:
+                sw.leave(3)
+            else:
+                sw.join(3)
+        round_batches = []
+        for _ in range(min(t, steps - round_start)):
+            bs = []
+            for i, s in enumerate(shards):
+                if not sw.active[i]:
+                    bs.append(None)
+                    continue
+                try:
+                    b = next(iters[i])
+                except StopIteration:
+                    iters[i] = batches(s[0], s[1], 16, rngs[i])
+                    b = next(iters[i])
+                bs.append(b)
+            round_batches.append(bs)
+        # fisher/gradmatch importance mass accumulates inside the round
         # via the configured MergeStrategy — no host-side estimation loop
-        sw.local_steps(bs)
-        sw.maybe_sync(vals)
+        sw.round(round_batches, vals)
 
-    aucs = [classify_report(np.asarray(predict(n.params, jnp.asarray(test_x))),
-                            test_y)["auc"] for n in sw.nodes]
+    aucs = [classify_report(np.asarray(predict(p, jnp.asarray(test_x))),
+                            test_y)["auc"] for p in sw.node_params]
     return aucs
 
 

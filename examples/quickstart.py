@@ -1,7 +1,11 @@
 """Quickstart: the P2P-SL framework in ~60 lines.
 
-Builds a reduced LM, trains a 4-node swarm on heterogeneous token streams with
-LoRA-only peer exchanges, and prints per-node losses before/after gossip.
+Builds a reduced LM, trains a 4-node swarm on heterogeneous token streams
+with LoRA-only peer exchanges, and prints per-round gates. Uses
+`SwarmSession` with ``backend="host"`` — the compatibility backend for
+arbitrary Python ``train_step_fn``/``eval_fn`` callables (batches are
+``[T][N]`` nested lists). Fully-traceable workloads should drop the
+``backend`` argument to get the compiled engine (see engine_swarm.py).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +15,7 @@ import numpy as np
 
 from repro.configs import SwarmConfig, TrainConfig, get_config, smoke_variant
 from repro.core.lora import inject_lora
-from repro.core.swarm import NodeState, SwarmLearner
+from repro.core.session import SwarmSession
 from repro.data import make_lm_stream
 from repro.launch.train import make_train_step
 from repro.models import build_model
@@ -28,44 +32,41 @@ def main():
     def train_step(params, opt_state, batch, step):
         return base_step(params, opt_state, batch)
 
-    # 2. four nodes, shared pre-trained-style init, LoRA adapters injected
-    key = jax.random.key(0)
-    base = model.init(key)
-    nodes = []
-    for i in range(4):
-        p = inject_lora(base, jax.random.key(i + 1), rank=8)
-        nodes.append(NodeState(params=p, opt_state=adamw_init(p),
-                               data_size=[100, 300, 300, 300][i]))
-
-    # 3. heterogeneous local data (topic-biased token streams)
-    streams = [make_lm_stream(64, 32, cfg.vocab_size, seed=i, topic_bias=1.0)
-               for i in range(4)]
-
     def eval_fn(params, val):
         loss, _ = model.loss_fn(params, val, remat=False)
         return 1.0 / (1.0 + float(loss))  # higher = better
 
-    swarm = SwarmLearner(
+    # 2. four nodes, shared pre-trained-style init, LoRA adapters injected
+    base = model.init(jax.random.key(0))
+    node_params = [inject_lora(base, jax.random.key(i + 1), rank=8)
+                   for i in range(4)]
+
+    swarm = SwarmSession(
         SwarmConfig(n_nodes=4, sync_every=10, topology="ring",
                     merge="fedavg", lora_only=True, val_threshold=0.8),
-        train_step, eval_fn, nodes)
+        train_step, eval_fn, backend="host",
+        params=node_params, opt_state=[adamw_init(p) for p in node_params],
+        data_sizes=[100, 300, 300, 300])
 
-    # 4. train + gossip
+    # 3. heterogeneous local data (topic-biased token streams)
+    streams = [make_lm_stream(64, 32, cfg.vocab_size, seed=i, topic_bias=1.0)
+               for i in range(4)]
     rng = np.random.default_rng(0)
     vals = [{k: jnp.asarray(v[:8]) for k, v in s.items()} for s in streams]
-    for step in range(50):
-        batches = []
-        for s in streams:
-            idx = rng.integers(0, 64, 8)
-            batches.append({k: jnp.asarray(v[idx]) for k, v in s.items()})
-        swarm.local_steps(batches)
-        log = swarm.maybe_sync(vals)
-        if log:
-            print(f"step {log['step']:3d} gossip: gates={log['gates']} "
-                  f"merged-metric={[round(m, 4) for m in log['metric_merged']]}")
 
-    for i, n in enumerate(swarm.nodes):
-        print(f"node {i}: final local loss = {n.history[-1]['loss']:.3f}")
+    def draw():  # one [N] list of per-node batches
+        return [{k: jnp.asarray(v[rng.integers(0, 64, 8)])
+                 for k, v in s.items()} for s in streams]
+
+    # 4. train + gossip: each round = sync_every local steps + gated merge
+    for _ in range(5):
+        log = swarm.round([draw() for _ in range(10)], vals)
+        print(f"step {log['step']:3d} gossip: gates={log['gates']} "
+              f"merged-metric={[round(m, 4) for m in log['metric_merged']]}")
+
+    for i, p in enumerate(swarm.node_params):
+        loss, _ = model.loss_fn(p, vals[i], remat=False)
+        print(f"node {i}: final val loss = {float(loss):.3f}")
     print("OK — swarm training with LoRA-only P2P sync complete.")
 
 

@@ -1,8 +1,17 @@
-"""Msgpack pytree checkpoints (per swarm node), offline-friendly.
+"""Msgpack pytree checkpoints (per swarm node or whole-session), offline-friendly.
 
-Layout: one ``<name>.msgpack`` file holding {treedef-paths: (dtype, shape,
-bytes)}. Restores exactly (dtype + shape verified). Swarm trainers save one
-checkpoint per node plus the sync log.
+Layout: one ``<name>.msgpack`` file holding {keypath: (dtype, shape, bytes)}.
+Restores exactly (dtype + shape verified). Swarm trainers save one checkpoint
+per node plus the sync log; `core.session.SwarmSession` saves its full
+stacked `SwarmState` (params, opt state, strategy stats, membership mask,
+rng, counters) as one tree.
+
+Keys are `jax.tree_util.keystr` key paths (e.g. ``['a'][0].params``), which
+disambiguate container kinds: a dict key ``"0"`` (``['0']``) and a sequence
+index 0 (``[0]``) — or a dict key ``"a/b"`` vs nested ``a → b`` — used to
+serialize to the same string under the old ``"/"``-joined scheme and silently
+collide. Legacy checkpoints are still readable: the loader falls back to the
+old key format per leaf.
 """
 from __future__ import annotations
 
@@ -16,10 +25,22 @@ import msgpack
 import numpy as np
 
 
+def _key(path) -> str:
+    """Unambiguous keypath string (keystr distinguishes dict/seq/attr keys)."""
+    return jax.tree_util.keystr(path)
+
+
+def _legacy_key(path) -> str:
+    """The pre-collision-fix key format (kept for reading old checkpoints)."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
 def _flatten(tree) -> dict:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = _key(path)
+        if key in flat:
+            raise ValueError(f"duplicate checkpoint key {key!r}")
         arr = np.asarray(leaf)
         flat[key] = {
             "dtype": str(arr.dtype),
@@ -43,8 +64,10 @@ def load_pytree(path: str, like: Any) -> Any:
     leaves = payload["leaves"]
 
     def restore(p, leaf):
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
-        entry = leaves[key]
+        key = _key(p)
+        entry = leaves.get(key)
+        if entry is None:  # legacy checkpoint written with "/"-joined keys
+            entry = leaves[_legacy_key(p)]
         arr = np.frombuffer(entry["data"], dtype=entry["dtype"]).reshape(entry["shape"])
         if list(np.asarray(leaf).shape) != entry["shape"]:
             raise ValueError(f"shape mismatch at {key}: "

@@ -152,7 +152,7 @@ class SwarmConfig:
     lora_rank: int = 16
     lora_alpha: float = 32.0
     val_threshold: float = 0.8    # paper: validation-based acceptance at 80%
-    gate_metric: str = "accuracy"
+    gate_metric: str = "auc"      # traced gate: auc | accuracy | f1 | sensitivity
     self_weight: float = 0.5      # gossip self-mixing weight (ring)
     fisher_decay: float = 0.95    # EMA decay of in-graph importance stats
     overlap_sync: bool = False    # stale-by-one double-buffered round overlap

@@ -1,17 +1,23 @@
-"""P2P Swarm Learning core — the paper's contribution as a composable module."""
+"""P2P Swarm Learning core — the paper's contribution as a composable module.
+
+`SwarmSession` is the public entry point (one API over a `SwarmState` pytree
+for the engine, gossip, and host backends); everything else is machinery it
+composes and the function-form ground truths the tests pin down.
+"""
 from repro.core.engine import (  # noqa: F401
     SwarmEngine, active_weights, host_commit, strategy_propose,
 )
 from repro.core.merge_impl import (  # noqa: F401
     FisherStrategy, GradMatchStrategy, MergeStrategy, MixStrategy,
     fisher_merge, get_strategy, gradmatch_merge, merge, mix, stack_params,
-    unstack_params,
+    topo_weighted_merge, unstack_params,
 )
+from repro.core.session import SwarmSession, SwarmState  # noqa: F401
 from repro.core.swarm import (  # noqa: F401
     NodeState, SwarmLearner, gate_decisions, gated_commit, mixing_matrix,
     propose_merge,
 )
 from repro.core.topology import (  # noqa: F401
-    build_matrix, dynamic_matrix, fedavg_weights, full_matrix, ring_matrix,
-    spectral_gap,
+    build_matrix, dynamic_matrix, fedavg_weights, full_matrix,
+    mixing_matrix_traced, ring_matrix, spectral_gap,
 )

@@ -24,6 +24,15 @@ node axis N):
 
 API
 ---
+**The public entry point is `repro.core.session.SwarmSession`**, which wraps
+this engine behind a single `SwarmState` pytree (params, opt state, strategy
+stats, runtime active mask, rng, counters) shared with the host and gossip
+backends, and adds the lifecycle layer: ``join``/``leave`` as pure state
+updates (zero retraces — the mixing matrix is built in-graph by
+`topology.mixing_matrix_traced` from the runtime mask) and
+``save``/``restore`` checkpointing. Constructing ``SwarmEngine`` directly
+still works but is a deprecated spelling of ``SwarmSession(...)``.
+
 ``SwarmEngine(cfg, train_step_fn, eval_fn, *, data_sizes, backend, ...)``
 
   * ``engine.round(params, opt_state, batches, val, active, step0, stats)``
@@ -48,9 +57,12 @@ API
       `launch.train.make_swarm_sync_step` (SPMD gossip backend).
 
 ``train_step_fn(params, opt_state, batch, step) -> (params, opt_state,
-metrics)`` and ``eval_fn(params, val) -> scalar in [0, 1]`` must be
-jax-traceable; arbitrary host callables stay on the `SwarmLearner` slow path,
-which still shares `strategy_propose` / `host_commit` below.
+metrics)`` — or the opt-in true-Fisher 4-tuple form that additionally
+returns per-step ``grads`` (consumed as exact squared gradients by
+fisher/gradmatch accumulation) — and ``eval_fn(params, val) -> scalar in
+[0, 1]`` must be jax-traceable; arbitrary host callables stay on the
+`SwarmLearner` slow path, which still shares `strategy_propose` /
+`host_commit` below.
 
 Roofline
 --------
@@ -137,29 +149,21 @@ def active_weights_traced(data_sizes, active) -> jnp.ndarray:
 mask_fishers = merge_lib.mask_fishers
 
 
-def dynamic_matrix_traced(base, active) -> jnp.ndarray:
-    """In-graph `topology.dynamic_matrix`: mask absent senders, renormalize
-    rows, absent/isolated rows fall back to identity (keep own params)."""
-    base = jnp.asarray(base, jnp.float32)
-    n = base.shape[0]
-    a = jnp.asarray(active).astype(jnp.float32)
-    W = base * a[None, :]
-    rows = W.sum(1, keepdims=True)
-    W = jnp.where(rows > 0, W / jnp.where(rows > 0, rows, 1.0), 0.0)
-    eye = jnp.eye(n, dtype=jnp.float32)
-    W = jnp.where(a[:, None] > 0, W, eye)   # absent nodes keep their params
-    rows = W.sum(1, keepdims=True)
-    return jnp.where(rows > 0, W, eye)      # fully-isolated active rows too
+# in-graph topology construction now lives in `core.topology`; re-exported
+# here for existing importers
+dynamic_matrix_traced = topo.dynamic_matrix_traced
 
 
 def strategy_propose(stacked, cfg: SwarmConfig, W, *, fishers=None,
-                     weights=None, strategy=None):
+                     weights=None, strategy=None, rows=None):
     """Merge candidate for every node via the configured `MergeStrategy`.
 
     Honors lora_only payload selection. Returns ``(candidate, W_commit,
     imp)``: the candidate pytree plus the row-weight matrix / optional
     importance pytree (payload subtree when lora_only) that `host_commit`
-    re-contracts through the fused Pallas kernel.
+    re-contracts through the fused Pallas kernel. ``rows`` (optional [N, N])
+    switches fisher/gradmatch to the topology-restricted per-row merge —
+    only graph-neighbour contributions enter each node's candidate.
     """
     strategy = strategy or merge_lib.get_strategy(cfg)
     if cfg.lora_only:
@@ -167,9 +171,10 @@ def strategy_propose(stacked, cfg: SwarmConfig, W, *, fishers=None,
         f_payload = (split_adapters(fishers)[0] if fishers is not None
                      else None)
         cand, W_eff, imp = strategy.propose(adapters, W, weights=weights,
-                                            fishers=f_payload)
+                                            fishers=f_payload, rows=rows)
         return combine(cand, base), W_eff, imp
-    return strategy.propose(stacked, W, weights=weights, fishers=fishers)
+    return strategy.propose(stacked, W, weights=weights, fishers=fishers,
+                            rows=rows)
 
 
 def propose_merge(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
@@ -226,17 +231,20 @@ def host_commit(stacked, candidate, W, gates, cfg: SwarmConfig, *, imp=None,
 # jitted wrappers for the SwarmLearner host path (cfg hashes — frozen dataclass)
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _propose_jit(stacked, W, fishers, weights, cfg):
-    return strategy_propose(stacked, cfg, W, fishers=fishers, weights=weights)
+def _propose_jit(stacked, W, fishers, weights, rows, cfg):
+    return strategy_propose(stacked, cfg, W, fishers=fishers, weights=weights,
+                            rows=rows)
 
 
-def propose_host(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None):
+def propose_host(stacked, cfg: SwarmConfig, W, *, fishers=None, weights=None,
+                 rows=None):
     """One-call jitted propose (stack→mix fused by XLA; no eager dispatch).
 
     Returns ``(candidate, W_commit, imp)`` — see :func:`strategy_propose`.
     """
     w = None if weights is None else jnp.asarray(weights, jnp.float32)
-    return _propose_jit(stacked, jnp.asarray(W, jnp.float32), fishers, w, cfg)
+    return _propose_jit(stacked, jnp.asarray(W, jnp.float32), fishers, w,
+                        rows, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block", "interpret"))
@@ -310,12 +318,24 @@ class SwarmEngine:
 
     def local_steps(self, params, opt_state, batches, step0, stats=None):
         """scan over the leading [T] time axis of vmapped local steps; the
-        strategy's importance accumulation rides in the same scan."""
+        strategy's importance accumulation rides in the same scan.
+
+        ``train_step_fn`` may opt into the true-Fisher hook by returning a
+        4-tuple ``(params, opt_state, metrics, grads)``: the per-step grads
+        feed ``strategy.accumulate_grads`` (exact squared gradients) instead
+        of the Δθ² proxy.
+        """
         def body(carry, batch):
             p, o, st, s = carry
-            p2, o2, m = self._vstep(p, o, batch, s)
-            if st is not None:
-                st = self.strategy.accumulate(st, p, p2, s)
+            out = self._vstep(p, o, batch, s)
+            if len(out) == 4:
+                p2, o2, m, grads = out
+                if st is not None:
+                    st = self.strategy.accumulate_grads(st, grads, s)
+            else:
+                p2, o2, m = out
+                if st is not None:
+                    st = self.strategy.accumulate(st, p, p2, s)
             return (p2, o2, st, s + 1), m
 
         init = (params, opt_state, stats, jnp.asarray(step0, jnp.int32))
@@ -337,15 +357,29 @@ class SwarmEngine:
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
              else jnp.asarray(active).astype(bool))
-        W = dynamic_matrix_traced(self._base_W, a)
+        W = self._traced_W(a)
         w = active_weights_traced(self.data_sizes, a)
         if self.strategy.uses_stats and fishers is None:
             # no evidence for any node -> zero mass everywhere, which the
             # eps floor turns into a uniform mean (= SwarmLearner default)
             fishers = jax.tree.map(jnp.zeros_like, stacked)
         fishers = self.strategy.finalize_mass(fishers, a)
+        rows = None
+        if self.strategy.uses_stats and self.cfg.topology in ("ring",
+                                                              "dynamic"):
+            # topology-restricted weighted merge: only graph-neighbour
+            # contributions enter each node's fisher/gradmatch candidate
+            rows = self.strategy.topo_rows(W, w)
         return strategy_propose(stacked, self.cfg, W, fishers=fishers,
-                                weights=w, strategy=self.strategy)
+                                weights=w, strategy=self.strategy, rows=rows)
+
+    def _traced_W(self, active):
+        """The round's mixing matrix, built in-graph from the runtime active
+        mask (join/leave/failure never retraces the compiled round)."""
+        weights = self.data_sizes if self.cfg.merge == "fedavg" else None
+        return topo.mixing_matrix_traced(self.cfg.topology, active,
+                                         weights=weights,
+                                         self_weight=self.cfg.self_weight)
 
     def _propose_gossip(self, stacked, active, fishers):
         from repro.core import gossip
@@ -373,20 +407,30 @@ class SwarmEngine:
                  else jnp.asarray(active).astype(bool))
             fishers = self.strategy.finalize_mass(fishers, a)
             w = active_weights_traced(self.data_sizes, a)
-            # the strategy owns any weight-folding identity (gradmatch ≡
-            # w-weighted fisher ratio) — fisher_gossip's two psums do the rest
-            fishers = self.strategy.gossip_mass(fishers, w)
-            merged = gossip.fisher_gossip(payload, fishers, self.mesh,
-                                          self.axis, inner_specs=specs)
-        elif cfg.topology == "ring":
+            if cfg.topology in ("ring", "dynamic"):
+                # topology-restricted weighted merge on the mesh: per-row
+                # ratio over graph-neighbour contributions only, matching
+                # the host backend's `topo_weighted_merge` oracle
+                rows = self.strategy.topo_rows(self._traced_W(a), w)
+                merged = gossip.topo_fisher_gossip(
+                    payload, fishers, rows, self.mesh, self.axis,
+                    inner_specs=specs, eps=self.strategy.eps)
+            else:
+                # the strategy owns any weight-folding identity (gradmatch ≡
+                # w-weighted fisher ratio) — fisher_gossip's two psums do
+                # the rest
+                fishers = self.strategy.gossip_mass(fishers, w)
+                merged = gossip.fisher_gossip(payload, fishers, self.mesh,
+                                              self.axis, inner_specs=specs)
+        elif cfg.topology == "ring" and active is None:
             merged = gossip.ring_gossip(payload, self.mesh, self.axis,
                                         self_weight=cfg.self_weight,
                                         inner_specs=specs)
-        elif cfg.topology == "dynamic" or active is not None:
+        elif cfg.topology in ("ring", "dynamic") or active is not None:
             # in-graph masking so a traced active mask works under jit too
             a = (jnp.ones((cfg.n_nodes,), bool) if active is None
                  else jnp.asarray(active).astype(bool))
-            W = dynamic_matrix_traced(self._base_W, a)
+            W = self._traced_W(a)
             merged = gossip.matrix_gossip(payload, W, self.mesh, self.axis,
                                           inner_specs=specs)
         else:

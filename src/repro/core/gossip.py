@@ -126,6 +126,41 @@ def fisher_gossip(stacked, fishers, mesh, axis: str, inner_specs=None,
     return jax.tree.map(leaf_fn, stacked, fishers, inner_specs, is_leaf=nones)
 
 
+def topo_fisher_gossip(stacked, fishers, rows, mesh, axis: str,
+                       inner_specs=None, eps: float = 1e-8):
+    """Topology-restricted importance-weighted merge over the swarm axis:
+
+        θ*_i = Σ_j rows[i,j]·(F_j+eps)⊙θ_j / Σ_j rows[i,j]·(F_j+eps)
+
+    The SPMD realization of `merge_impl.topo_weighted_merge` — ring/dynamic
+    swarms merge only graph-neighbour contributions. Lowering: all_gather of
+    the importance-weighted numerator and the mass, then a local per-row
+    contraction (two `matrix_gossip` passes share the mixing machinery)."""
+    nones = lambda v: v is None
+
+    def wnum(x, f):
+        if x is None:
+            return None
+        return (f.astype(jnp.float32) + eps) * x.astype(jnp.float32)
+
+    def wden(x, f):
+        if x is None:
+            return None
+        return jnp.broadcast_to(f.astype(jnp.float32) + eps, x.shape)
+
+    num = matrix_gossip(jax.tree.map(wnum, stacked, fishers, is_leaf=nones),
+                        rows, mesh, axis, inner_specs=inner_specs)
+    den = matrix_gossip(jax.tree.map(wden, stacked, fishers, is_leaf=nones),
+                        rows, mesh, axis, inner_specs=inner_specs)
+
+    def ratio(x, n, d):
+        if x is None:
+            return None
+        return (n / jnp.maximum(d, 1e-30)).astype(x.dtype)
+
+    return jax.tree.map(ratio, stacked, num, den, is_leaf=nones)
+
+
 def matrix_gossip(stacked, W, mesh, axis: str, inner_specs=None):
     """General mixing matrix (dynamic membership): all_gather + local row mix."""
     n = mesh.shape[axis]

@@ -94,6 +94,32 @@ def gradmatch_merge(stacked, fishers, weights: Optional[jnp.ndarray] = None,
     return jax.tree.map(one, stacked, fishers)
 
 
+def topo_weighted_merge(stacked, fishers, rows, eps: float = 1e-8):
+    """Topology-restricted importance-weighted merge (per-row ratio):
+
+        θ*_i = Σ_j rows[i,j]·(F_j+eps)⊙θ_j / Σ_j rows[i,j]·(F_j+eps)
+
+    ``rows`` [N, N] ≥ 0 carries the graph structure: ring/dynamic swarms pass
+    their (possibly traced, membership-masked) mixing rows so each node only
+    merges graph-neighbour contributions. Uniform rows cancel in the ratio —
+    the full-topology case reduces to :func:`fisher_merge`; rows of dataset
+    weights reduce to the gradmatch weighted-fisher identity. This is the
+    numerical ground truth the fused Pallas ``imp`` kernel re-contracts.
+    """
+    R = jnp.asarray(rows, jnp.float32)
+
+    def one(x, f):
+        n = x.shape[0]
+        xf = x.astype(jnp.float32).reshape(n, -1)
+        ff = f.astype(jnp.float32).reshape(n, -1) + eps
+        num = jax.lax.dot(R, ff * xf, precision=jax.lax.Precision.HIGHEST)
+        den = jax.lax.dot(R, ff, precision=jax.lax.Precision.HIGHEST)
+        out = num / jnp.maximum(den, 1e-30)
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(one, stacked, fishers)
+
+
 def mask_fishers(fishers, active):
     """Zero departed nodes' Fisher mass so their stale params can't enter
     fisher/gradmatch merges. The single implementation of that invariant —
@@ -163,6 +189,12 @@ class MergeStrategy:
         """In-graph per-step stats update. Default: no-op."""
         return stats
 
+    def accumulate_grads(self, stats, grads, step):
+        """True-Fisher accumulation: consume exact per-step gradients (the
+        opt-in ``train_step_fn`` 4-tuple signature returns them) instead of
+        the Δθ² proxy. Default: no-op."""
+        return stats
+
     def fishers(self, stats):
         """Finalize accumulators into diagonal importance estimates."""
         return stats
@@ -184,7 +216,13 @@ class MergeStrategy:
             fishers = mask_fishers(fishers, active)
         return self.fishers(fishers)
 
-    def propose(self, stacked, W, *, weights=None, fishers=None):
+    def topo_rows(self, W, weights=None):
+        """Per-row contribution weights for a topology-restricted merge
+        (``rows=`` of :func:`topo_weighted_merge`). None: method is already
+        row-structured (mix) or has no restricted form."""
+        return None
+
+    def propose(self, stacked, W, *, weights=None, fishers=None, rows=None):
         raise NotImplementedError
 
 
@@ -195,7 +233,7 @@ class MixStrategy(MergeStrategy):
     def __init__(self, method: str = "fedavg"):
         self.method = method
 
-    def propose(self, stacked, W, *, weights=None, fishers=None):
+    def propose(self, stacked, W, *, weights=None, fishers=None, rows=None):
         return mix(stacked, W), W, None
 
 
@@ -231,6 +269,16 @@ class FisherStrategy(MergeStrategy):
 
         return jax.tree.map(one, stats, old_params, new_params)
 
+    def accumulate_grads(self, stats, grads, step):
+        """Exact diagonal-Fisher mass from per-step gradients: F ← γF + g²
+        (the ROADMAP true-Fisher hook — same decayed-sum shape as the Δθ²
+        proxy, but scale-correct under adaptive optimizers)."""
+        def one(s, g):
+            gf = g.astype(jnp.float32)
+            return self.decay * s + gf * gf
+
+        return jax.tree.map(one, stats, grads)
+
     def fishers(self, stats):
         """Normalize accumulated mass to a global mean of 1. The merge ratio
         is scale-free, so this changes nothing when mass is already O(1) —
@@ -251,10 +299,20 @@ class FisherStrategy(MergeStrategy):
     def _rows(self, n, weights):
         return jnp.ones((n, n), jnp.float32)
 
-    def propose(self, stacked, W, *, weights=None, fishers=None):
+    def topo_rows(self, W, weights=None):
+        """Graph-restricted fisher: contribution weights ARE the mixing rows,
+        so only graph neighbours enter  Σ_j W[i,j]F_jθ_j / Σ_j W[i,j]F_j.
+        Uniform full-topology rows cancel in the ratio (≡ global fisher)."""
+        return jnp.asarray(W, jnp.float32)
+
+    def propose(self, stacked, W, *, weights=None, fishers=None, rows=None):
         if fishers is None:
             fishers = jax.tree.map(jnp.ones_like, stacked)
         n = jax.tree.leaves(stacked)[0].shape[0]
+        if rows is not None:   # ring/dynamic: per-row neighbour-restricted
+            candidate = topo_weighted_merge(stacked, fishers, rows,
+                                            eps=self.eps)
+            return candidate, rows, self._imp(stacked, fishers, weights)
         candidate = self._merge(stacked, fishers, weights)
         return candidate, self._rows(n, weights), self._imp(stacked, fishers,
                                                             weights)
@@ -275,6 +333,14 @@ class GradMatchStrategy(FisherStrategy):
         w = (jnp.full((n,), 1.0 / n, jnp.float32) if weights is None
              else jnp.asarray(weights, jnp.float32))
         return jnp.broadcast_to(w[None, :], (n, n))
+
+    def topo_rows(self, W, weights=None):
+        """Graph-restricted gradmatch: dataset weights folded into the
+        neighbour rows — c_ij = W[i,j]·w_j in the weighted-fisher ratio."""
+        Wj = jnp.asarray(W, jnp.float32)
+        if weights is None:
+            return Wj
+        return Wj * jnp.asarray(weights, jnp.float32)[None, :]
 
     def _merge(self, stacked, fishers, weights):
         return gradmatch_merge(stacked, fishers, weights, eps=self.eps)

@@ -1,0 +1,382 @@
+"""SwarmSession: ONE backend-agnostic entry point for P2P swarm learning.
+
+The paper ships three ways to run the same algorithm — the host-simulated
+`SwarmLearner` loop, the compiled `SwarmEngine`, and the SPMD gossip path in
+`launch.train` — each with its own constructor, state threading, and
+checkpoint story. `SwarmSession` collapses them behind a single API driven by
+one pytree, :class:`SwarmState`:
+
+    session = SwarmSession(cfg, train_step, eval_fn, params=params,
+                           data_sizes=sizes)          # backend="engine"
+    log = session.round(batches, val)                 # T steps + gated sync
+    session.leave(3); session.round(batches, val)     # zero retraces
+    session.join(3)
+    session.save("ckpt.msgpack")
+    session = SwarmSession.restore("ckpt.msgpack", cfg, train_step, eval_fn,
+                                   params=params, data_sizes=sizes)
+
+Backends (construction-time choice; the API is identical):
+
+  * ``"engine"``  — the compiled stacked round (N param copies on one
+    device): vmapped local steps, in-graph gate, fused Pallas commit.
+  * ``"gossip"``  — the same round with the merge realized as mesh
+    collectives (leading node axis sharded over ``axis``).
+  * ``"host"``    — arbitrary (non-traceable) Python ``train_step_fn`` /
+    ``eval_fn`` callables via the `SwarmLearner` loop; the compatibility
+    path. Batches are ``[T][N]`` nested lists of per-node batch objects and
+    ``val`` is an ``[N]`` list, instead of stacked arrays.
+
+Dynamic membership is **runtime state**: ``session.join(i)`` / ``leave(i)``
+flip one element of ``SwarmState.active`` — a device array consumed by the
+traced topology builder (`topology.mixing_matrix_traced`), so a join→leave→
+rejoin schedule mid-``run_rounds`` reuses the same compiled round with zero
+retraces. Checkpoints round-trip the FULL state — params, opt state, merge-
+strategy importance accumulators, membership mask, rng, and round/step
+counters — through `checkpointing.io`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import load_metadata, load_pytree, save_pytree
+from repro.configs.base import SwarmConfig
+from repro.core import merge_impl as merge_lib
+from repro.core.engine import SwarmEngine
+from repro.kernels.fused_merge import DEFAULT_BLOCK
+
+
+@dataclass
+class SwarmState:
+    """The whole swarm as one pytree (every backend consumes and returns it).
+
+    params / opt_state / stats are **stacked** pytrees (leading node axis N);
+    ``stats`` carries the merge strategy's importance accumulators (None for
+    mean/fedavg). ``active`` is the runtime membership mask, ``rng`` a
+    (legacy uint32) PRNG key folded once per round, ``round``/``step`` the
+    global counters. All fields are data — membership changes, resumed
+    counters, and reseeded rngs never trigger a recompile.
+    """
+
+    params: Any
+    opt_state: Any = None
+    stats: Any = None
+    active: Any = None
+    rng: Any = None
+    round: Any = 0
+    step: Any = 0
+
+
+jax.tree_util.register_dataclass(
+    SwarmState,
+    data_fields=["params", "opt_state", "stats", "active", "rng", "round",
+                 "step"],
+    meta_fields=[])
+
+
+def _stack_per_node(value, n: int):
+    """list/tuple of N per-node pytrees -> stacked; single pytree -> tiled.
+
+    A TOP-LEVEL list/tuple is always read as "one entry per node". Params
+    whose own pytree root is a list/tuple (e.g. a plain list of per-layer
+    arrays) must therefore be wrapped — ``params=[p] * cfg.n_nodes`` — or
+    passed pre-stacked via ``stacked=True``; they cannot be disambiguated
+    from a per-node list by inspection.
+    """
+    if value is None:
+        return None
+    if isinstance(value, (list, tuple)):
+        if len(value) != n:
+            raise ValueError(
+                f"expected {n} per-node pytrees, got a length-{len(value)} "
+                "list/tuple. A top-level list/tuple is interpreted as one "
+                "entry per node — wrap a list-rooted params pytree as "
+                "[params] * n_nodes, or pass it pre-stacked (stacked=True)")
+        return merge_lib.stack_params(list(value))
+    return merge_lib.stack_params([value] * n)
+
+
+class SwarmSession:
+    """Backend-agnostic swarm driver over a single :class:`SwarmState`.
+
+    Parameters
+    ----------
+    cfg : SwarmConfig
+    train_step_fn : ``(params, opt_state, batch, step) -> (params, opt_state,
+        metrics)`` — or the opt-in true-Fisher 4-tuple form that additionally
+        returns per-step grads. Must be traceable for the engine/gossip
+        backends; arbitrary Python for ``backend="host"``.
+    eval_fn : ``(params, val) -> scalar in [0, 1]`` (same traceability rule).
+    params / opt_state : a single per-node pytree (replicated N times), a
+        list of N pytrees, or — with ``stacked=True`` — an already-stacked
+        pytree with leading node axis.
+    data_sizes : per-node dataset sizes (fedavg / weighted-merge weights).
+    backend : ``"engine"`` (default) | ``"gossip"`` | ``"host"``.
+    mesh / axis / param_specs : gossip backend placement.
+    seed : session rng seed (defaults to ``cfg.seed``).
+    """
+
+    def __init__(self, cfg: SwarmConfig, train_step_fn: Optional[Callable],
+                 eval_fn: Optional[Callable], *, params=None, opt_state=None,
+                 data_sizes: Optional[Sequence[float]] = None,
+                 backend: str = "engine", mesh=None, axis: Optional[str] = None,
+                 param_specs=None, block: int = DEFAULT_BLOCK,
+                 interpret: Optional[bool] = None, strategy=None,
+                 seed: Optional[int] = None, stacked: bool = False):
+        if backend not in ("engine", "gossip", "host"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.cfg = cfg
+        self.backend = backend
+        self.train_step_fn = train_step_fn
+        self.eval_fn = eval_fn
+        n = cfg.n_nodes
+        if stacked:
+            stacked_params, stacked_opt = params, opt_state
+        else:
+            stacked_params = _stack_per_node(params, n)
+            stacked_opt = _stack_per_node(opt_state, n)
+        if stacked_params is None:
+            raise ValueError("SwarmSession needs initial params")
+        rng = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+
+        if backend == "host":
+            from repro.core.swarm import NodeState, SwarmLearner
+            sizes = (np.ones(n) if data_sizes is None
+                     else np.asarray(data_sizes, np.float64))
+            nodes = [NodeState(params=p, opt_state=o, data_size=float(s))
+                     for p, o, s in zip(
+                         merge_lib.unstack_params(stacked_params, n),
+                         (merge_lib.unstack_params(stacked_opt, n)
+                          if stacked_opt is not None else [None] * n),
+                         sizes)]
+            self._learner = SwarmLearner(cfg, train_step_fn, eval_fn, nodes)
+            self._rng = rng
+            self._round_ct = 0
+            self.engine = None
+            return
+
+        self.engine = SwarmEngine(
+            cfg, train_step_fn, eval_fn, data_sizes=data_sizes,
+            backend="gossip" if backend == "gossip" else "host",
+            mesh=mesh, axis=axis, param_specs=param_specs, block=block,
+            interpret=interpret, strategy=strategy)
+        self._state = SwarmState(
+            params=stacked_params, opt_state=stacked_opt,
+            stats=self.engine.init_stats(stacked_params),
+            active=jnp.ones((n,), bool), rng=rng,
+            round=jnp.asarray(0, jnp.int32), step=jnp.asarray(0, jnp.int32))
+        # the three compiled drivers; the state buffer is donated, so every
+        # call consumes self._state and replaces it with the result
+        self._round_jit = jax.jit(self._round_impl, donate_argnums=(0,))
+        self._rounds_jit = jax.jit(self._rounds_impl, donate_argnums=(0,))
+        self._local_jit = jax.jit(self._local_impl, donate_argnums=(0,))
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def state(self) -> SwarmState:
+        if self.backend != "host":
+            return self._state
+        lr = self._learner
+        strategy = lr.strategy
+        stats = None
+        if strategy.uses_stats:
+            stats = merge_lib.stack_params([
+                nd.fisher_stats if nd.fisher_stats is not None
+                else strategy.init_stats(nd.params)
+                for nd in lr.nodes])
+        opt = (None if all(nd.opt_state is None for nd in lr.nodes)
+               else merge_lib.stack_params([nd.opt_state for nd in lr.nodes]))
+        return SwarmState(
+            params=merge_lib.stack_params([nd.params for nd in lr.nodes]),
+            opt_state=opt, stats=stats,
+            active=jnp.asarray([nd.active for nd in lr.nodes]),
+            rng=self._rng, round=jnp.asarray(self._round_ct, jnp.int32),
+            step=jnp.asarray(lr.step, jnp.int32))
+
+    def load_state(self, state: SwarmState) -> None:
+        """Replace the session's state (all backends)."""
+        if self.backend != "host":
+            self._state = state
+            return
+        lr = self._learner
+        n = self.cfg.n_nodes
+        ps = merge_lib.unstack_params(state.params, n)
+        os_ = (merge_lib.unstack_params(state.opt_state, n)
+               if state.opt_state is not None else [None] * n)
+        sts = (merge_lib.unstack_params(state.stats, n)
+               if state.stats is not None else [None] * n)
+        active = np.asarray(state.active)
+        for i, nd in enumerate(lr.nodes):
+            nd.params, nd.opt_state, nd.fisher_stats = ps[i], os_[i], sts[i]
+            nd.active = bool(active[i])
+        self._rng = jnp.asarray(state.rng)
+        self._round_ct = int(state.round)
+        lr.step = int(state.step)
+
+    @property
+    def node_params(self):
+        """Per-node (unstacked) parameter pytrees."""
+        if self.backend == "host":
+            return [nd.params for nd in self._learner.nodes]
+        return merge_lib.unstack_params(self._state.params, self.cfg.n_nodes)
+
+    @property
+    def active(self) -> np.ndarray:
+        if self.backend == "host":
+            return np.asarray([nd.active for nd in self._learner.nodes])
+        return np.asarray(self.state.active)
+
+    # -- dynamic membership (runtime data; never recompiles) -----------------
+
+    def join(self, node: int) -> None:
+        """Node (re-)joins the swarm: flips one element of the active mask."""
+        self._set_active_index(node, True)
+
+    def leave(self, node: int) -> None:
+        """Node leaves the swarm: excluded from every merge (its params and
+        importance mass enter nobody's candidate, its own params pass through
+        commits untouched). Local training is governed by DATA, not
+        membership — on every backend a departed node keeps training on
+        whatever batches the caller still supplies; feed it ``None`` (host)
+        or padding it can ignore (engine) to pause it entirely."""
+        self._set_active_index(node, False)
+
+    def set_active(self, mask) -> None:
+        if self.backend == "host":
+            for i, v in enumerate(np.asarray(mask)):
+                self._learner.nodes[i].active = bool(v)
+            return
+        self._state = dataclasses.replace(
+            self._state, active=jnp.asarray(mask).astype(bool))
+
+    def _set_active_index(self, node: int, value: bool) -> None:
+        if self.backend == "host":
+            self._learner.nodes[node].active = value
+            return
+        self._state = dataclasses.replace(
+            self._state, active=self._state.active.at[node].set(value))
+
+    # -- compiled round bodies (engine / gossip backends) --------------------
+    # Thin SwarmState adapters over the engine's round implementations — the
+    # serial and stale-by-one overlap scan bodies have exactly one home
+    # (`SwarmEngine._round` / `_run_rounds` / `_run_local`).
+
+    def _round_impl(self, state: SwarmState, batches, val):
+        t = jax.tree.leaves(batches)[0].shape[0]
+        p, o, out = self.engine._round(state.params, state.opt_state, batches,
+                                       val, state.active, state.step,
+                                       state.stats)
+        st = out.pop("stats", None)
+        new = SwarmState(
+            params=p, opt_state=o, stats=st, active=state.active,
+            rng=jax.random.fold_in(state.rng, state.round),
+            round=state.round + 1, step=state.step + t)
+        return new, out
+
+    def _rounds_impl(self, state: SwarmState, batches, val):
+        shape = jax.tree.leaves(batches)[0].shape
+        r, t = shape[0], shape[1]
+        p, o, tm, logs = self.engine._run_rounds(
+            state.params, state.opt_state, batches, val, state.active,
+            state.step, state.stats)
+        st = logs.pop("stats", None)
+        rng = state.rng
+        for i in range(r):  # same per-round folds as r successive round()s
+            rng = jax.random.fold_in(rng, state.round + i)
+        new = SwarmState(
+            params=p, opt_state=o, stats=st, active=state.active, rng=rng,
+            round=state.round + r, step=state.step + r * t)
+        return new, tm, logs
+
+    def _local_impl(self, state: SwarmState, batches):
+        s_count = jax.tree.leaves(batches)[0].shape[0]
+        p, o, tm, st = self.engine._run_local(
+            state.params, state.opt_state, batches, state.step, state.stats)
+        new = dataclasses.replace(state, params=p, opt_state=o, stats=st,
+                                  step=state.step + s_count)
+        return new, tm
+
+    # -- drivers -------------------------------------------------------------
+
+    def round(self, batches, val):
+        """One full round: ``sync_every`` local steps + gated sync.
+
+        engine/gossip: ``batches`` is a stacked ``[T, N, ...]`` pytree, the
+        whole round runs as one compiled call, and the log holds device
+        arrays ``gates`` / ``metric_local`` / ``metric_merged`` (each [N])
+        plus ``train`` ([T, N] per-step metrics). host: ``batches`` is a
+        ``[T][N]`` nested list of per-node batch objects, ``val`` an ``[N]``
+        list, and the log is the `SwarmLearner` sync record — same
+        ``gates``/``metric_local``/``metric_merged`` keys as Python lists,
+        plus ``step``/``spectral_gap``; per-step train metrics live in each
+        node's ``history`` instead of a ``train`` key.
+        """
+        if self.backend == "host":
+            return self._host_round(batches, val)
+        self._state, out = self._round_jit(self._state, batches, val)
+        return out
+
+    def run_rounds(self, batches, val):
+        """R rounds over ``[R, T, N, ...]`` batches, scanned on-device
+        (engine/gossip) or looped (host). Returns per-round logs — stacked
+        [R, ...] arrays with a ``train`` key on engine/gossip; per-key lists
+        of the R host round logs (see :meth:`round`) on host."""
+        if self.backend == "host":
+            logs = [self._host_round(rb, val) for rb in batches]
+            return {k: [lg[k] for lg in logs] for k in logs[0]}
+        self._state, tm, logs = self._rounds_jit(self._state, batches, val)
+        return dict(logs, train=tm)
+
+    def run_local(self, batches):
+        """Sync-free local training ([S, N, ...] stacked, or [S][N] host)."""
+        if self.backend == "host":
+            for step_batches in batches:
+                self._learner.local_steps(step_batches)
+            return None
+        self._state, tm = self._local_jit(self._state, batches)
+        return tm
+
+    def _host_round(self, batches, val):
+        lr = self._learner
+        for step_batches in batches:
+            lr.local_steps(step_batches)
+        log = lr.sync(val)
+        self._round_ct += 1
+        self._rng = jax.random.fold_in(self._rng, self._round_ct - 1)
+        return log
+
+    # -- checkpoint / resume -------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Checkpoint the FULL session state (params, opt state, strategy
+        stats, active mask, rng, counters) as one msgpack pytree."""
+        state = self.state
+        meta = {"cfg": dataclasses.asdict(self.cfg), "backend": self.backend,
+                "round": int(state.round), "step": int(state.step),
+                "format": 1}
+        save_pytree(path, state, metadata=meta)
+
+    def load(self, path: str) -> "SwarmSession":
+        """Restore a checkpoint into this session (same cfg/param shapes)."""
+        meta = load_metadata(path)
+        saved_cfg = meta.get("cfg", {})
+        for key in ("n_nodes", "merge", "topology", "lora_only"):
+            if key in saved_cfg and saved_cfg[key] != getattr(self.cfg, key):
+                raise ValueError(
+                    f"checkpoint cfg mismatch: {key}={saved_cfg[key]!r} "
+                    f"saved vs {getattr(self.cfg, key)!r} in session")
+        self.load_state(load_pytree(path, self.state))
+        return self
+
+    @classmethod
+    def restore(cls, path: str, cfg: SwarmConfig, train_step_fn, eval_fn,
+                **kwargs) -> "SwarmSession":
+        """Build a session (constructor kwargs supply the param template)
+        and restore the checkpointed state into it."""
+        return cls(cfg, train_step_fn, eval_fn, **kwargs).load(path)

@@ -1,4 +1,4 @@
-"""P2P-SL orchestration: propose → validate → gated commit.
+"""Host-simulated P2P-SL loop — the `SwarmSession` compatibility backend.
 
 The paper's loop (§3.1):
   1. nodes train locally for `sync_every` steps,
@@ -7,18 +7,32 @@ The paper's loop (§3.1):
   4. each node ACCEPTS the merge only if a local validation check clears the
      80% threshold; otherwise it keeps its own params (autonomy).
 
-``SwarmLearner`` is the host-simulated N-node swarm that accepts **arbitrary
-Python** ``train_step_fn``/``eval_fn`` callables (multi-arch examples, tests).
-Its merge math delegates to `repro.core.engine` and the configured
-`merge_impl.MergeStrategy`: propose runs as one jitted program, Fisher mass
-for fisher/gradmatch merges accumulates automatically during ``local_steps``
-(no caller-side estimation loop), and every commit goes through the fused
+**The public entry point is `repro.core.session.SwarmSession`** — one API
+over a single `SwarmState` pytree for every backend, with runtime
+join/leave membership and checkpoint/resume:
+
+    session = SwarmSession(cfg, train_step, eval_fn, params=p,
+                           backend="host")   # this module's loop underneath
+    session.round(batches, val); session.leave(2); session.save(path)
+
+``SwarmLearner`` (below) is the machinery that backend wraps: a host-driven
+N-node swarm accepting **arbitrary Python** ``train_step_fn``/``eval_fn``
+callables (non-traceable models, multi-arch examples, tests). Constructing it
+directly still works but is a deprecated spelling of
+``SwarmSession(..., backend="host")``. Its merge math delegates to
+`repro.core.engine` and the configured `merge_impl.MergeStrategy`: propose
+runs as one jitted program, Fisher mass for fisher/gradmatch merges
+accumulates automatically during ``local_steps`` (no caller-side estimation
+loop; a ``train_step_fn`` returning the opt-in 4-tuple
+``(params, opt_state, metrics, grads)`` feeds exact squared gradients
+instead of the Δθ² proxy), ring/dynamic fisher merges are restricted to
+graph-neighbour contributions, and every commit goes through the fused
 Pallas merge kernel — only the user eval calls stay on the host.
 
-Fully-traceable workloads (the paper repro in `experiments/histo`, the CLI
-swarm path, benchmarks) should use `repro.core.engine.SwarmEngine` directly:
-it compiles the whole round — local steps, in-graph validation, gate, fused
-commit — into a single `jax.jit` with donated buffers.
+Fully-traceable workloads should use the session's default ``"engine"``
+backend (or ``"gossip"`` on a mesh): the whole round — local steps, in-graph
+validation, gate, fused commit — compiles into a single `jax.jit` with
+donated buffers.
 """
 from __future__ import annotations
 
@@ -77,23 +91,36 @@ class SwarmLearner:
         return merge_lib.get_strategy(self.cfg)
 
     def local_steps(self, batches_per_node: Sequence[Any]):
-        """One local step on every active node. For fisher/gradmatch merges
-        the strategy accumulates each node's importance mass here (into
-        ``node.fisher_stats``) — callers no longer estimate Fishers
-        themselves. An explicitly set ``node.fisher`` (true squared-gradient
-        estimates) is never touched and takes precedence at sync."""
+        """One local step on every node with a batch (pass ``None`` to skip a
+        node). Data availability gates local training; MEMBERSHIP gates merge
+        participation only — a departed node keeps training on its own shard
+        if its stream still supplies batches, matching the engine backend's
+        semantics. For fisher/gradmatch merges the strategy accumulates each
+        node's importance mass here (into ``node.fisher_stats``) — callers no
+        longer estimate Fishers themselves. An explicitly set ``node.fisher``
+        (true squared-gradient estimates) is never touched and takes
+        precedence at sync."""
         strategy = self.strategy
         for node, batch in zip(self.nodes, batches_per_node):
-            if not node.active or batch is None:
+            if batch is None:
                 continue
             old_params = node.params
-            node.params, node.opt_state, metrics = self.train_step_fn(
+            out = self.train_step_fn(
                 node.params, node.opt_state, batch, self.step)
+            grads = None
+            if len(out) == 4:  # opt-in true-Fisher hook: per-step grads
+                node.params, node.opt_state, metrics, grads = out
+            else:
+                node.params, node.opt_state, metrics = out
             if strategy.uses_stats:
                 if node.fisher_stats is None:
                     node.fisher_stats = strategy.init_stats(old_params)
-                node.fisher_stats = strategy.accumulate(
-                    node.fisher_stats, old_params, node.params, self.step)
+                if grads is not None:
+                    node.fisher_stats = strategy.accumulate_grads(
+                        node.fisher_stats, grads, self.step)
+                else:
+                    node.fisher_stats = strategy.accumulate(
+                        node.fisher_stats, old_params, node.params, self.step)
             node.history.append({k: float(v) for k, v in metrics.items()})
         self.step += 1
 
@@ -131,8 +158,13 @@ class SwarmLearner:
             fishers = merge_lib.stack_params(masses)
             fishers = strategy.finalize_mass(fishers, np.asarray(active))
         weights = active_weights(sizes, active)
+        rows = None
+        if strategy.uses_stats and self.cfg.topology in ("ring", "dynamic"):
+            # topology-restricted weighted merge: graph-neighbour rows only
+            rows = strategy.topo_rows(jnp.asarray(W, jnp.float32),
+                                      jnp.asarray(weights, jnp.float32))
         candidate, W_eff, imp = engine_lib.propose_host(
-            stacked, self.cfg, W, fishers=fishers, weights=weights)
+            stacked, self.cfg, W, fishers=fishers, weights=weights, rows=rows)
         cand_nodes = merge_lib.unstack_params(candidate, self.n)
 
         metric_local, metric_merged = [], []

@@ -1,4 +1,4 @@
-"""Swarm peer topologies as mixing matrices.
+"""Swarm peer topologies as mixing matrices — host (numpy) AND traced (jax).
 
 The paper's "dynamic networking" (§3.1) — nodes discover, join and leave the
 swarm — is modeled as a time-varying row-stochastic **mixing matrix** W_t:
@@ -10,6 +10,15 @@ one gossip round maps node i's params to  θ_i ← Σ_j W_t[i,j] θ_j.
   dynamic                → membership-masked matrix; absent nodes are isolated
                            (W[i,i]=1) and contribute nothing — the paper's
                            join/leave semantics
+
+Two families of builders:
+
+  * ``build_matrix`` / ``full_matrix`` / ``ring_matrix`` / ``dynamic_matrix``
+    — host-side numpy, for host-driven loops and analysis (spectral gap).
+  * ``mixing_matrix_traced`` — the SAME construction fully in-graph from a
+    **runtime** ``active`` mask plus the static topology kind, so a compiled
+    swarm round handles join/leave/failure mid-run with zero retraces: the
+    membership mask is data, not a compile-time constant.
 
 Consensus rate is governed by the spectral gap 1-|λ₂(W)|; exposed here so
 tests can assert the gossip contraction property.
@@ -67,6 +76,55 @@ def dynamic_matrix(base: np.ndarray, active: Sequence[bool]) -> np.ndarray:
         if a[i] and W[i].sum() == 0:
             W[i, i] = 1.0
     return W
+
+
+# ---------------------------------------------------------------------------
+# traced builders: W from a runtime active mask, inside jit/scan
+# ---------------------------------------------------------------------------
+
+def dynamic_matrix_traced(base, active):
+    """In-graph :func:`dynamic_matrix`: mask absent senders, renormalize rows;
+    absent/isolated rows fall back to identity (keep own params). ``active``
+    may be a traced array — membership changes reuse the compiled round."""
+    import jax.numpy as jnp
+
+    base = jnp.asarray(base, jnp.float32)
+    n = base.shape[0]
+    a = jnp.asarray(active).astype(jnp.float32)
+    W = base * a[None, :]
+    rows = W.sum(1, keepdims=True)
+    W = jnp.where(rows > 0, W / jnp.where(rows > 0, rows, 1.0), 0.0)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    W = jnp.where(a[:, None] > 0, W, eye)   # absent nodes keep their params
+    rows = W.sum(1, keepdims=True)
+    return jnp.where(rows > 0, W, eye)      # fully-isolated active rows too
+
+
+def mixing_matrix_traced(topology: str, active, *, weights=None,
+                         self_weight: float = 0.5):
+    """Mixing matrix built fully in-graph from a runtime ``active`` mask.
+
+    ``topology`` is static (it fixes the graph family and therefore the
+    program); ``active`` and ``weights`` are runtime data. Equivalent to
+    ``dynamic_matrix(build_matrix(topology, n, ...), active)`` but traceable,
+    so one compiled round serves every membership configuration.
+    """
+    import jax.numpy as jnp
+
+    a = jnp.asarray(active).astype(jnp.float32)
+    n = a.shape[0]
+    if topology in ("full", "dynamic"):
+        if weights is None:
+            w = jnp.full((n,), 1.0 / n, jnp.float32)
+        else:
+            w = jnp.asarray(weights, jnp.float32)
+            w = w / jnp.maximum(w.sum(), 1e-30)
+        base = jnp.broadcast_to(w[None, :], (n, n))
+    elif topology == "ring":
+        base = jnp.asarray(ring_matrix(n, self_weight), jnp.float32)
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    return dynamic_matrix_traced(base, a)
 
 
 def spectral_gap(W: np.ndarray) -> float:

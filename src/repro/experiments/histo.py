@@ -19,11 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig, TrainConfig
-from repro.core import merge_impl as merge_lib
-from repro.core.engine import SwarmEngine
+from repro.core.session import SwarmSession
 from repro.data import (augment, batches, make_histo_dataset, paper_splits,
                         shard_to_nodes)
-from repro.metrics import classify_report, davies_bouldin, macro_auc_traced
+from repro.metrics import classify_report, davies_bouldin, gate_metric_fn
 from repro.models.cnn import bce_loss, forward_cnn, init_cnn
 from repro.optim import EarlyStopper, adamw_init, adamw_update, make_schedule
 
@@ -45,7 +44,7 @@ class HistoExperimentConfig:
     seed: int = 0
     swarm: SwarmConfig = field(default_factory=lambda: SwarmConfig(
         n_nodes=4, sync_every=20, topology="full", merge="fedavg",
-        lora_only=False, val_threshold=0.8))
+        lora_only=False, val_threshold=0.8, gate_metric="auc"))
     # small CNN (paper arch scaled to 24px inputs for CPU)
     growth: int = 8
     stem: int = 16
@@ -137,12 +136,13 @@ def _stack_vals(vals):
 def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
     """Train nodes (swarm if swarm_cfg else isolated). Returns node params.
 
-    Runs on `SwarmEngine`: the whole sync round — `sync_every` vmapped local
-    steps, in-graph sort-based AUC gate, fused Pallas commit — is one
-    compiled program; `run_rounds` scans over rounds with zero host
+    Runs on `SwarmSession` (engine backend): the whole sync round —
+    `sync_every` vmapped local steps, the in-graph gate metric selected by
+    ``swarm.gate_metric`` (sort-based AUC by default), fused Pallas commit —
+    is one compiled program; `run_rounds` scans over rounds with zero host
     round-trips. The swarm config's merge method (including fisher/gradmatch
     with in-graph importance accumulation) and `overlap_sync` double-buffered
-    rounds are handled entirely inside the engine.
+    rounds are handled entirely inside the session's compiled drivers.
     """
     key = jax.random.key(ecfg.seed + 42)   # shared init = warm-start effect
     n = len(shards)
@@ -154,45 +154,44 @@ def _train_loop(ecfg, train_step, shards, *, swarm_cfg=None, log=None):
         trains.append((x[n_val:], y[n_val:]))
 
     params = _init_params(ecfg, key)
-    stacked = merge_lib.stack_params([params] * n)
-    opt = merge_lib.stack_params([adamw_init(params)] * n)
     xs, ys = _batch_stream(ecfg, trains)
     val = _stack_vals(vals)
 
+    cfg = swarm_cfg or SwarmConfig(n_nodes=n, sync_every=10**9,
+                                   gate_metric="auc")
+    metric = gate_metric_fn(cfg.gate_metric)
+
     def eval_fn(p, v):
         x, y, m = v
-        return macro_auc_traced(jax.nn.sigmoid(forward_cnn(p, x)), y, m)
+        return metric(jax.nn.sigmoid(forward_cnn(p, x)), y, m)
 
-    cfg = swarm_cfg or SwarmConfig(n_nodes=n, sync_every=10**9)
-    eng = SwarmEngine(cfg, train_step, eval_fn,
-                      data_sizes=[len(y) for _, y in shards])
+    sess = SwarmSession(cfg, train_step, eval_fn, params=params,
+                        opt_state=adamw_init(params), seed=ecfg.seed,
+                        data_sizes=[len(y) for _, y in shards])
 
     sync_log = []
     if swarm_cfg is None or cfg.sync_every > ecfg.steps:
-        stacked, opt, _, _ = eng.run_local(
-            stacked, opt, (jnp.asarray(xs), jnp.asarray(ys)), 0)
+        sess.run_local((jnp.asarray(xs), jnp.asarray(ys)))
     else:
         t = cfg.sync_every
         rounds = ecfg.steps // t
         head = (jnp.asarray(xs[:rounds * t]).reshape((rounds, t) + xs.shape[1:]),
                 jnp.asarray(ys[:rounds * t]).reshape((rounds, t) + ys.shape[1:]))
-        stacked, opt, _, logs = eng.run_rounds(stacked, opt, head, val, None, 0)
+        logs = sess.run_rounds(head, val)
         if ecfg.steps % t:
-            stacked, opt, _, _ = eng.run_local(
-                stacked, opt,
-                (jnp.asarray(xs[rounds * t:]), jnp.asarray(ys[rounds * t:])),
-                rounds * t)
+            sess.run_local((jnp.asarray(xs[rounds * t:]),
+                            jnp.asarray(ys[rounds * t:])))
         gates = np.asarray(logs["gates"])
         ml = np.asarray(logs["metric_local"])
         mm = np.asarray(logs["metric_merged"])
         sync_log = [{"step": (r + 1) * t, "gates": gates[r].tolist(),
                      "metric_local": ml[r].tolist(),
                      "metric_merged": mm[r].tolist(),
-                     "spectral_gap": eng.spectral_gap}
+                     "spectral_gap": sess.engine.spectral_gap}
                     for r in range(rounds)]
         if log is not None:
             log.extend(sync_log)
-    return merge_lib.unstack_params(stacked, n), sync_log
+    return sess.node_params, sync_log
 
 
 def run_experiment(ecfg: HistoExperimentConfig) -> dict:

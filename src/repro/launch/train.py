@@ -126,7 +126,6 @@ def main():
 
     from repro.checkpointing import save_json, save_pytree
     from repro.configs import get_config, smoke_variant
-    from repro.core import merge_impl as merge_lib
     from repro.core.lora import inject_lora
     from repro.data import make_lm_stream
     from repro.models import build_model
@@ -150,6 +149,9 @@ def main():
     ap.add_argument("--lora", action="store_true",
                     help="LoRA-adapter-only peer payloads (paper §3.2)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", default="",
+                    help="resume a swarm run from a session checkpoint "
+                         "(session.msgpack written by --ckpt-dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -190,15 +192,15 @@ def main():
                     print("early stop (patience exhausted)")
                     break
         node_params = [p]
-    else:  # P2P-SL: the jitted stacked engine, one compiled call per round
+    else:  # P2P-SL: one SwarmSession, one compiled call per round
+        from repro.core.session import SwarmSession
+
         ps = []
         for i in range(n_nodes):
             p = model.init(jax.random.key(args.seed))
             if args.lora:
                 p = inject_lora(p, jax.random.key(args.seed + 1 + i), rank=8)
             ps.append(p)
-        stacked = merge_lib.stack_params(ps)
-        opts = merge_lib.stack_params([adamw_init(p) for p in ps])
 
         def train_step(params, opt_state, batch, step):
             return base_step(params, opt_state, batch)
@@ -210,11 +212,17 @@ def main():
         scfg = SwarmConfig(n_nodes=n_nodes, sync_every=args.sync_every,
                            topology=args.topology, merge=args.merge,
                            lora_only=args.lora)
-        engine = SwarmEngine(scfg, train_step, eval_fn,
-                             data_sizes=[len(s["tokens"]) for s in streams])
-        # fisher/gradmatch: importance accumulators ride along every engine
-        # call — estimation is in-graph, no host-side Fisher loop
-        stats = engine.init_stats(stacked)
+        # fisher/gradmatch importance accumulators live inside the session's
+        # SwarmState — estimation is in-graph, no host-side Fisher loop
+        sess = SwarmSession(scfg, train_step, eval_fn, params=ps,
+                            opt_state=[adamw_init(p) for p in ps],
+                            seed=args.seed,
+                            data_sizes=[len(s["tokens"]) for s in streams])
+        if args.resume:
+            sess.load(args.resume)
+            final_step = int(sess.state.step)
+            print(f"resumed from {args.resume} at step {final_step} "
+                  f"(round {int(sess.state.round)})")
         vals = {k: jnp.asarray(np.stack([s[k][:8] for s in streams]))
                 for k in streams[0]}
 
@@ -232,9 +240,7 @@ def main():
             t = min(max(args.sync_every, 1), args.steps - final_step)
             block = draw(t)
             if t == args.sync_every:  # full round: local steps + gated sync
-                stacked, opts, out = engine.round(stacked, opts, block, vals,
-                                                  None, final_step, stats)
-                stats = out.pop("stats", None)
+                out = sess.round(block, vals)
                 losses = np.asarray(out["train"]["loss"])[-1]
                 gates = np.asarray(out["gates"]).astype(bool).tolist()
                 sync_log.append({
@@ -243,8 +249,7 @@ def main():
                     "metric_merged": np.asarray(out["metric_merged"]).tolist()})
                 extra = f" sync gates={gates}"
             else:  # remainder steps, no sync
-                stacked, opts, tm, stats = engine.run_local(
-                    stacked, opts, block, final_step, stats)
+                tm = sess.run_local(block)
                 losses = np.asarray(tm["loss"])[-1]
                 extra = ""
             final_step += t
@@ -255,7 +260,9 @@ def main():
                 if stopper.update(float(np.mean(losses))):
                     print("early stop (patience exhausted)")
                     break
-        node_params = merge_lib.unstack_params(stacked, n_nodes)
+        node_params = sess.node_params
+        if args.ckpt_dir:  # full session state: checkpoint/resume round-trip
+            sess.save(f"{args.ckpt_dir}/session.msgpack")
 
     if args.ckpt_dir:
         for i, p in enumerate(node_params):

@@ -7,7 +7,11 @@ swarm engine's in-graph validation gate — same value up to f32, no host
 round-trip. It uses the sort-based (rank-sum) Mann-Whitney formulation,
 O(C·V log V), so gating scales past a few thousand validation samples per
 node; the old O(V²) pairwise form is kept as `_macro_auc_pairwise` (the
-small-input cross-check oracle)."""
+small-input cross-check oracle).
+
+`gate_metric_fn(name)` maps the `SwarmConfig.gate_metric` knob to a traced
+gate metric: "auc" | "accuracy" | "f1" | "sensitivity" — each with a host
+numpy oracle in this module (`macro_auc` / `accuracy` / `confusion_stats`)."""
 from __future__ import annotations
 
 import numpy as np
@@ -108,6 +112,81 @@ def _macro_auc_pairwise(probs, labels, valid=None):
     aucs = jnp.stack(aucs)
     present = jnp.stack(present).astype(jnp.float32)
     return jnp.sum(aucs * present) / jnp.maximum(present.sum(), 1.0)
+
+
+def _confusion_traced(probs, labels, valid=None):
+    """Per-class (tp, fn, fp, tn) counts from argmax predictions, in-graph.
+
+    Mirrors :func:`confusion_stats` exactly (all C classes enter the macro
+    average; ``max(count, 1)`` denominators guard absent classes) so the
+    traced gate metrics agree with the host oracles bit-for-bit up to f32.
+    ``valid`` masks padded validation rows (vmapped engine eval).
+    """
+    import jax.numpy as jnp
+
+    probs = jnp.asarray(probs)
+    labels = jnp.asarray(labels)
+    v = (jnp.ones(labels.shape, bool) if valid is None
+         else jnp.asarray(valid).astype(bool))
+    preds = jnp.argmax(probs, axis=-1)
+    classes = jnp.arange(probs.shape[1])
+    is_c = labels[None, :] == classes[:, None]       # [C, V]
+    pred_c = preds[None, :] == classes[:, None]
+    vf = v[None, :]
+    tp = jnp.sum(pred_c & is_c & vf, axis=1).astype(jnp.float32)
+    fn = jnp.sum(~pred_c & is_c & vf, axis=1).astype(jnp.float32)
+    fp = jnp.sum(pred_c & ~is_c & vf, axis=1).astype(jnp.float32)
+    tn = jnp.sum(~pred_c & ~is_c & vf, axis=1).astype(jnp.float32)
+    return tp, fn, fp, tn
+
+
+def sensitivity_traced(probs, labels, valid=None):
+    """Traced macro sensitivity (recall) — the host oracle is
+    ``confusion_stats(...)['sensitivity']``."""
+    import jax.numpy as jnp
+
+    tp, fn, _, _ = _confusion_traced(probs, labels, valid)
+    return jnp.mean(tp / jnp.maximum(tp + fn, 1.0))
+
+
+def macro_f1_traced(probs, labels, valid=None):
+    """Traced macro F1 — the host oracle is ``confusion_stats(...)['f1']``."""
+    import jax.numpy as jnp
+
+    tp, fn, fp, _ = _confusion_traced(probs, labels, valid)
+    se = tp / jnp.maximum(tp + fn, 1.0)
+    pr = tp / jnp.maximum(tp + fp, 1.0)
+    return jnp.mean(2.0 * pr * se / jnp.maximum(pr + se, 1e-12))
+
+
+def accuracy_traced(probs, labels, valid=None):
+    """Traced accuracy over valid rows (host oracle: :func:`accuracy`)."""
+    import jax.numpy as jnp
+
+    probs = jnp.asarray(probs)
+    labels = jnp.asarray(labels)
+    v = (jnp.ones(labels.shape, bool) if valid is None
+         else jnp.asarray(valid).astype(bool))
+    hit = (jnp.argmax(probs, axis=-1) == labels) & v
+    return hit.sum() / jnp.maximum(v.sum(), 1.0)
+
+
+GATE_METRICS = {
+    "auc": macro_auc_traced,
+    "accuracy": accuracy_traced,
+    "f1": macro_f1_traced,
+    "sensitivity": sensitivity_traced,
+}
+
+
+def gate_metric_fn(name: str):
+    """The traced validation-gate metric for `SwarmConfig.gate_metric`:
+    ``fn(probs [V, C], labels [V], valid [V]) -> scalar in [0, 1]``."""
+    try:
+        return GATE_METRICS[name]
+    except KeyError:
+        raise ValueError(f"unknown gate_metric {name!r}; "
+                         f"choose from {sorted(GATE_METRICS)}") from None
 
 
 def confusion_stats(preds: np.ndarray, labels: np.ndarray, n_classes: int):

@@ -53,3 +53,15 @@ def test_smoke_covers_overlap_round(smoke_out):
     assert "engine_round_serial_us" in smoke_out
     assert "engine_round_overlap_us" in smoke_out
     assert "overlap_vs_serial_ratio" in smoke_out
+
+
+def test_smoke_covers_dynamic_membership(smoke_out):
+    """The join/leave/rejoin schedule runs and never retraces the compiled
+    round: membership is runtime state, not a compile-time constant."""
+    assert "dynamic_membership_round_us" in smoke_out
+    for line in smoke_out.splitlines():
+        if line.startswith("dynamic_membership_retraces"):
+            assert int(line.split(",")[2]) == 0
+            break
+    else:
+        raise AssertionError("no dynamic_membership retrace row")
