@@ -22,6 +22,13 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
   spmd_parity       full SwarmEngine(backend="gossip") round vs the host
                     backend on a forced CPU device mesh (subprocess):
                     wall time + estimated collective bytes per sync
+  swarm_sync        wire-efficiency suite: wall time + cost-model predicted
+                    bytes/sync for every sync schedule × topology × wire
+                    dtype, written machine-readable to BENCH_swarm_sync.json
+  ring_sync_parity  ring-native two-ppermute topo-fisher gossip vs the
+                    single-gather fallback on a forced CPU mesh
+                    (subprocess): committed-params diff vs the host oracle
+                    + HLO-measured collective bytes (~4·P vs 2·N·P)
 
 ``--smoke`` runs a seconds-scale subset (tiny shapes, no cached experiment
 protocol) so CI can exercise every benchmark entry point; a tier-1 test
@@ -42,6 +49,25 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULT_DIR = "experiments/histo"
+BENCH_SYNC_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "..", "BENCH_swarm_sync.json")
+
+
+def _bench_json_update(section: str, data) -> str:
+    """Merge one section into the machine-readable BENCH_swarm_sync.json."""
+    path = os.path.abspath(BENCH_SYNC_JSON)
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except Exception:  # noqa: BLE001 — regenerate a corrupt file
+            doc = {}
+    doc["schema"] = 1
+    doc[section] = data
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=float)
+    return path
 
 
 def _time_us(fn, *args, reps=20):
@@ -435,6 +461,137 @@ def spmd_parity_smoke():
     spmd_parity(smoke=True)
 
 
+def swarm_sync(smoke: bool = False):
+    """Wire-efficiency suite (ISSUE 4): one engine-backend session per sync
+    schedule × topology × merge × wire dtype, reporting the comms cost
+    model's predicted bytes/sync next to measured round wall time; rows are
+    written machine-readable to BENCH_swarm_sync.json so the perf
+    trajectory populates."""
+    from repro.configs.base import SwarmConfig
+    from repro.core.session import SwarmSession
+
+    n, t, d, reps = (4, 2, 1 << 12, 3) if smoke else (4, 4, 1 << 16, 10)
+    if smoke:
+        combos = [("full", "fedavg", "f32"), ("ring", "fisher", "f32"),
+                  ("ring", "fisher", "int8"), ("dynamic", "fisher", "bf16")]
+    else:
+        combos = [(topo, merge, wd)
+                  for topo in ("full", "ring", "dynamic")
+                  for merge in ("fedavg", "fisher")
+                  for wd in ("f32", "bf16", "int8")]
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(0, 0.1, (d,)), jnp.float32)
+    batches = jnp.zeros((t, n, 1))
+    val = jnp.zeros((n, 1))
+
+    def train_step(p, o, b, s):
+        g = p["w"] * 1e-3 + 0.0 * b.mean()
+        return {"w": p["w"] - g}, {"m": o["m"] + g}, {"loss": jnp.sum(g * g)}
+
+    def eval_fn(p, v):
+        return 1.0 - 0.0 * jnp.sum(p["w"])
+
+    rows = []
+    for topo, merge, wd in combos:
+        cfg = SwarmConfig(n_nodes=n, sync_every=t, topology=topo, merge=merge,
+                          lora_only=False, val_threshold=0.0, wire_dtype=wd)
+        sess = SwarmSession(cfg, train_step, eval_fn, params={"w": w0},
+                            opt_state={"m": jnp.zeros_like(w0)},
+                            data_sizes=[float(i + 1) for i in range(n)])
+
+        def once():
+            return sess.round(batches, val)["gates"]
+
+        us = _time_us(once, reps=reps)
+        s = sess.sync_schedule
+        rows.append(dict(
+            schedule=s.name, collective=s.collective, topology=topo,
+            merge=merge, wire_dtype=wd, n_nodes=n,
+            payload_params=sess.payload_params,
+            predicted_bytes_per_sync=sess.predicted_sync_bytes,
+            wall_us_per_round=us, simulated=s.simulated))
+        print(f"swarm_sync_{topo}_{merge}_{wd},{us:.1f},"
+              f"sched={s.name};bytes={sess.predicted_sync_bytes:.0f}")
+    # smoke writes its own section so CI runs never clobber the committed
+    # full-grid rows (the perf-trajectory artifact)
+    path = _bench_json_update("schedules_smoke" if smoke else "schedules",
+                              rows)
+    print(f"swarm_sync_json,0,{path}")
+
+
+def swarm_sync_smoke():
+    swarm_sync(smoke=True)
+
+
+def _ring_sync_parity_inner(n: int, d: int, reps: int):
+    """Runs inside the forced-device-count subprocess: ring-native
+    two-ppermute topo-fisher gossip vs the single-gather fallback, both
+    against the host numpy oracle, with HLO-measured collective bytes."""
+    from repro.core import gossip
+    from repro.core.merge_impl import topo_weighted_merge
+    from repro.core.topology import build_matrix, ring_structured
+    from repro.launch import hlo_stats
+
+    assert jax.device_count() >= n, "inner bench needs the forced device count"
+    mesh = jax.make_mesh((n,), ("node",), devices=jax.devices()[:n])
+    rng = np.random.default_rng(0)
+    x = {"w": jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)}
+    f = {"w": jnp.asarray(np.abs(rng.normal(1, 0.4, (n, d))), jnp.float32)}
+    W = build_matrix("ring", n)
+    assert ring_structured(W)
+    want = np.asarray(topo_weighted_merge(x, f, W)["w"])
+
+    fns = {
+        "ppermute": jax.jit(lambda a, b: gossip.ring_topo_fisher_gossip(
+            a, b, W, mesh, "node")),
+        "gathered": jax.jit(lambda a, b: gossip.topo_fisher_gossip(
+            a, b, W, mesh, "node")),
+    }
+    got = {}
+    for name, fn in fns.items():
+        out = np.asarray(fn(x, f)["w"])
+        err = float(np.abs(out - want).max())
+        us = _time_us(lambda fn=fn: fn(x, f)["w"], reps=reps)
+        coll = hlo_stats.collective_bytes(fn.lower(x, f).compile().as_text())
+        got[name] = (us, err, coll["total"])
+        print(f"ring_sync_{name}_us,{us:.1f},n={n};d={d}")
+        print(f"ring_sync_{name}_max_diff,0,{err:.2e}")
+        print(f"ring_sync_{name}_coll_bytes,0,{coll['total']}")
+    # per the collective-bytes estimator: ring two-ppermute payload is the
+    # fused (F⊙θ ⊕ F) side-channel = ~4·P f32 values; the gather is 2·N·P
+    print(f"ring_sync_ppermute_P_values,0,{got['ppermute'][2] / 4 / d:.2f}")
+    print(f"ring_sync_bytes_ratio,0,"
+          f"{got['ppermute'][2] / got['gathered'][2]:.3f}")
+
+
+def ring_sync_parity(smoke: bool = False):
+    """Forced-CPU-mesh ring-ppermute parity (subprocess, like spmd_parity):
+    keeps the ring-native schedule honest on dev boxes without a mesh."""
+    import subprocess
+    import sys
+    n, d, reps = (4, 1 << 12, 3) if smoke else (4, 1 << 16, 10)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}").strip()
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--inner-ring-sync", f"{n},{d},{reps}"],
+        capture_output=True, text=True, env=env, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"ring sync parity subprocess failed: "
+                           f"{out.stderr[-800:]}")
+    print(out.stdout, end="")
+    rows = [dict(zip(("name", "us", "derived"), line.split(",", 2)))
+            for line in out.stdout.strip().splitlines() if "," in line]
+    _bench_json_update("ring_parity_smoke" if smoke else "ring_parity", rows)
+
+
+def ring_sync_parity_smoke():
+    ring_sync_parity(smoke=True)
+
+
 def merge_kernel_smoke():
     merge_kernel(1 << 14)
 
@@ -446,12 +603,12 @@ def overlap_roundtrip_smoke():
 ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
        sync_roundtrip, engine_roundtrip, overlap_roundtrip,
-       dynamic_membership, spmd_parity]
+       dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
          engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
-         spmd_parity_smoke]
+         spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke]
 
 
 def roofline_table():
@@ -474,11 +631,19 @@ def main(argv=None) -> None:
     ap.add_argument("--inner-spmd-parity", default="",
                     help="internal: n,t,d,reps (run inside the forced-device"
                          " subprocess)")
+    ap.add_argument("--inner-ring-sync", default="",
+                    help="internal: n,d,reps (run inside the forced-device"
+                         " subprocess)")
     args = ap.parse_args(argv)
 
     if args.inner_spmd_parity:
         n, t, d, reps = map(int, args.inner_spmd_parity.split(","))
         _spmd_parity_inner(n, t, d, reps)
+        return
+
+    if args.inner_ring_sync:
+        n, d, reps = map(int, args.inner_ring_sync.split(","))
+        _ring_sync_parity_inner(n, d, reps)
         return
 
     print("name,us_per_call,derived")

@@ -156,6 +156,13 @@ class SwarmConfig:
     self_weight: float = 0.5      # gossip self-mixing weight (ring)
     fisher_decay: float = 0.95    # EMA decay of in-graph importance stats
     overlap_sync: bool = False    # stale-by-one double-buffered round overlap
+    # wire compression (core.comms): payload dtype on the sync wire.
+    #   "f32"  — uncompressed (default; bit-identical to the pre-comms paths)
+    #   "bf16" — payloads cast to bf16 on the wire, f32 accumulation
+    #   "int8" — error-feedback quantized deltas with per-block scales; the
+    #            residual rides in SwarmState.wire (engine backend)
+    wire_dtype: str = "f32"
+    wire_block: int = 512         # elements per int8 scale block (mult. of 128)
     seed: int = 0
 
 

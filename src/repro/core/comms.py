@@ -1,0 +1,244 @@
+"""Wire-efficient sync layer: cost model, schedule picker, quantized wire.
+
+The paper's pitch is P2P sync cheap enough for resource-constrained clinics,
+yet the merge machinery alone doesn't decide what actually crosses the wire:
+the same topology × merge-strategy pair can lower to an ``all_gather`` that
+moves N·P values per sync or to a two-``ppermute`` ring schedule that moves
+4·P — and every payload can ride the wire compressed. This module is the one
+place those decisions live; every backend routes through it:
+
+  * **Cost model** — :func:`candidate_schedules` enumerates the collective
+    schedules that are *correct* for a ``SwarmConfig`` (topology × merge ×
+    shard layout), each with an analytic per-device bytes/sync formula
+    (:class:`SyncSchedule`). :func:`pick_schedule` argmins the model — the
+    engine's gossip backend dispatches on the winner at trace time, and the
+    engine/host backends surface the equivalent schedule (``simulated=True``)
+    so logs and benchmarks always report predicted wire cost.
+  * **Quantized error-feedback wire** (``SwarmConfig.wire_dtype``) — peers
+    exchange int8/bf16-quantized parameter *deltas* against a shared
+    reference copy θ̂ (what the wire has already delivered), with per-block
+    scales and the residual θ−θ̂ carried across rounds in ``SwarmState.wire``
+    (f32 accumulation everywhere; only the wire payload is low-precision).
+    :func:`wire_effective` is the XLA ground truth; the fused Pallas
+    quantize→merge→dequantize commit (`kernels.fused_merge.
+    fused_quant_merge_all`) re-derives the same values in one VMEM pass.
+
+Schedule table (values moved per device per sync, P = payload params/node,
+N = swarm size; wire dtype scales the point-to-point entries):
+
+  topology   merge            schedule              values/sync   collective
+  full       mean/fedavg      fedavg_psum           2P·(N−1)/N    psum
+  ring       mean/fedavg      ring_ppermute         2P            ppermute
+  dynamic    mean/fedavg      gathered_rows         N·P           all_gather
+  full       fisher/gradmatch fisher_psum           4P·(N−1)/N    psum
+  ring       fisher/gradmatch ring_topo_ppermute    4P            ppermute
+  dynamic    fisher/gradmatch gathered_topo_stack   2N·P          all_gather
+
+Ring schedules need one node per mesh shard (``per == 1``) and N ≥ 3 (an
+N = 2 ring folds both neighbour edges onto one peer); otherwise the gathered
+forms are the fallback. psum schedules allreduce in f32 (wire compression
+does not commute with the reduction), so int8/bf16 wire can flip the argmin
+toward a gathered/ppermute schedule — that is the point of the model.
+
+Error-feedback contract: v_t = θ_t − θ̂_{t−1} is quantized per block of
+``wire_block`` elements (scale = max|v|/127, round-half-even — fully
+deterministic), θ̂_t = θ̂_{t−1} + dequant(v_t), so the residual θ_t − θ̂_t is
+exactly the quantization error and telescopes: on constant inputs
+‖residual‖ contracts by ≥ 127× per round toward zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+WIRE_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
+#: nominal payload used to rank schedules when the real count isn't known yet
+_NOMINAL_P = 1 << 20
+
+
+def validate_wire_dtype(wire_dtype: str) -> str:
+    wd = wire_dtype or "f32"
+    if wd not in WIRE_BYTES:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r} "
+                         f"(choose from {sorted(WIRE_BYTES)})")
+    return wd
+
+
+def validate_wire_block(wire_block: int) -> int:
+    if wire_block <= 0 or wire_block % 128:
+        raise ValueError(f"wire_block must be a positive multiple of 128 "
+                         f"(lane width), got {wire_block}")
+    return wire_block
+
+
+# ---------------------------------------------------------------------------
+# cost model + schedule picker
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SyncSchedule:
+    """One collective schedule with its analytic wire cost.
+
+    ``payload_factor`` is the number of values moved per device per sync in
+    units of P (the per-node payload param count) — the HLO result-shape
+    convention `launch.hlo_stats` measures (all_gather counts its gathered
+    result, psum its ring-allreduce traffic, ppermute each permuted payload).
+    """
+
+    name: str
+    collective: str          # "psum" | "ppermute" | "all_gather" | "none"
+    payload_factor: float
+    wire_dtype: str = "f32"
+    wire_block: int = 512
+    simulated: bool = False  # engine/host backend: the SPMD-equivalent cost
+
+    def bytes_per_sync(self, payload_params: int) -> float:
+        """Predicted per-device wire bytes for one sync of P payload values."""
+        vals = self.payload_factor * float(payload_params)
+        out = vals * WIRE_BYTES[self.wire_dtype]
+        if self.wire_dtype == "int8":  # one f32 scale per wire block
+            out += vals / self.wire_block * 4.0
+        return out
+
+    def describe(self, payload_params: Optional[int] = None) -> str:
+        p = _NOMINAL_P if payload_params is None else payload_params
+        tag = " (simulated)" if self.simulated else ""
+        return (f"{self.name}[{self.collective}/{self.wire_dtype}]{tag}: "
+                f"{self.payload_factor:g}·P values, "
+                f"{self.bytes_per_sync(p) / 1e6:.3f} MB/sync at P={p}")
+
+
+def candidate_schedules(cfg, *, per: int = 1) -> List[SyncSchedule]:
+    """Every schedule that is CORRECT for this config's sync semantics.
+
+    ``per`` = stacked nodes per mesh shard (N // mesh axis size); ppermute
+    schedules map one node to one shard, so they need ``per == 1``.
+    """
+    n = cfg.n_nodes
+    wd = validate_wire_dtype(getattr(cfg, "wire_dtype", "f32"))
+    wb = validate_wire_block(getattr(cfg, "wire_block", 512))
+    weighted = cfg.merge in ("fisher", "gradmatch")
+    ring_ok = cfg.topology == "ring" and per == 1 and n >= 3
+    mk = lambda name, coll, factor, wdt: SyncSchedule(
+        name, coll, factor, wire_dtype=wdt, wire_block=wb)
+
+    out: List[SyncSchedule] = []
+    if weighted:
+        if cfg.topology == "full":
+            # psums reduce in f32: compression doesn't commute with the sum
+            out.append(mk("fisher_psum", "psum", 4.0 * (n - 1) / n, "f32"))
+        out.append(mk("gathered_topo_stack", "all_gather", 2.0 * n, wd))
+        if ring_ok:
+            out.append(mk("ring_topo_ppermute", "ppermute", 4.0, wd))
+    else:
+        if cfg.topology == "full":
+            out.append(mk("fedavg_psum", "psum", 2.0 * (n - 1) / n, "f32"))
+        out.append(mk("gathered_rows", "all_gather", 1.0 * n, wd))
+        if ring_ok:
+            out.append(mk("ring_ppermute", "ppermute", 2.0, wd))
+    return out
+
+
+def pick_schedule(cfg, *, per: int = 1, payload_params: Optional[int] = None,
+                  simulated: bool = False) -> SyncSchedule:
+    """Cheapest correct schedule under the cost model (trace-time static:
+    everything it consumes — topology, merge, wire dtype, N, shard layout —
+    is config/mesh data, so the choice never retraces a compiled round)."""
+    p = _NOMINAL_P if payload_params is None else payload_params
+    cands = candidate_schedules(cfg, per=per)
+    best = min(cands, key=lambda s: s.bytes_per_sync(p))
+    if simulated:
+        best = dataclasses.replace(best, simulated=True)
+    return best
+
+
+def payload_param_count(stacked, lora_only: bool, n_nodes: int) -> int:
+    """Per-node payload values P for a stacked params pytree."""
+    tree = stacked
+    if lora_only:
+        from repro.core.lora import split_adapters
+        tree = split_adapters(stacked)[0]
+    total = sum(x.size for x in jax.tree.leaves(tree) if x is not None)
+    return int(total // max(n_nodes, 1))
+
+
+# ---------------------------------------------------------------------------
+# quantized wire: stateless per-block quant→dequant + error-feedback advance
+# ---------------------------------------------------------------------------
+
+def _leaf_quant_dequant(x, wire_dtype: str, wire_block: int):
+    """Per-leaf quantize→dequantize of a stacked [N, ...] leaf (f32 out).
+
+    int8: per-(node, block-of-``wire_block``-elements) max-abs scales,
+    deterministic round-half-even — the exact arithmetic the fused Pallas
+    commit kernel re-derives in its VMEM pass (same block grid from 0).
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    if wire_dtype == "f32":
+        return xf
+    if wire_dtype == "bf16":
+        return xf.astype(jnp.bfloat16).astype(jnp.float32)
+    n = xf.shape[0]
+    flat = xf.reshape(n, -1)
+    d = flat.shape[1]
+    pad = (-d) % wire_block
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    blocks = flat.reshape(n, -1, wire_block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.where(scale > 0, scale, 1.0)),
+                 -127.0, 127.0)
+    deq = (q * scale).reshape(n, -1)[:, :d]
+    return deq.reshape(xf.shape)
+
+
+def quant_dequant_tree(tree, wire_dtype: str, wire_block: int = 512):
+    """Stateless wire round-trip of a stacked pytree (None leaves pass)."""
+    wire_dtype = validate_wire_dtype(wire_dtype)
+    if wire_dtype == "f32":
+        return jax.tree.map(
+            lambda x: None if x is None else jnp.asarray(x, jnp.float32),
+            tree, is_leaf=lambda v: v is None)
+    wire_block = validate_wire_block(wire_block)
+    return jax.tree.map(
+        lambda x: (None if x is None
+                   else _leaf_quant_dequant(x, wire_dtype, wire_block)),
+        tree, is_leaf=lambda v: v is None)
+
+
+def init_wire(payload):
+    """Zero wire reference θ̂ matching a stacked payload pytree (f32)."""
+    return jax.tree.map(
+        lambda x: None if x is None else jnp.zeros(x.shape, jnp.float32),
+        payload, is_leaf=lambda v: v is None)
+
+
+def wire_effective(payload, wire, wire_dtype: str, wire_block: int = 512):
+    """Error-feedback wire advance: θ̂' = θ̂ + dequant(quant(θ − θ̂)).
+
+    Returns the NEW reference θ̂' — simultaneously the effective params every
+    peer reconstructs this round and the state to carry into the next one
+    (the residual θ − θ̂' is exactly this round's quantization error, so
+    untransmitted mass is never dropped, only delayed)."""
+    wire_dtype = validate_wire_dtype(wire_dtype)
+    wire_block = validate_wire_block(wire_block)
+
+    def one(p, w):
+        if p is None:
+            return None
+        v = jnp.asarray(p, jnp.float32) - w
+        return w + _leaf_quant_dequant(v, wire_dtype, wire_block)
+
+    return jax.tree.map(one, payload, wire, is_leaf=lambda v: v is None)
+
+
+def wire_residual(payload, wire):
+    """θ − θ̂: the untransmitted (error-feedback) mass per leaf."""
+    return jax.tree.map(
+        lambda p, w: None if p is None else jnp.asarray(p, jnp.float32) - w,
+        payload, wire, is_leaf=lambda v: v is None)

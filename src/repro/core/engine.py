@@ -98,9 +98,11 @@ import numpy as np
 
 from repro.configs.base import SwarmConfig
 import repro.core.topology as topo
+from repro.core import comms
 from repro.core import merge_impl as merge_lib
 from repro.core.lora import combine, split_adapters
-from repro.kernels.fused_merge import DEFAULT_BLOCK, fused_merge_tree
+from repro.kernels.fused_merge import (DEFAULT_BLOCK, fused_merge_tree,
+                                       fused_quant_merge_tree)
 
 
 def default_interpret() -> bool:
@@ -297,6 +299,22 @@ class SwarmEngine:
         self.data_sizes = (np.ones(cfg.n_nodes) if data_sizes is None
                            else np.asarray(data_sizes, np.float64))
         self.strategy = strategy or merge_lib.get_strategy(cfg)
+        self.wire_dtype = comms.validate_wire_dtype(
+            getattr(cfg, "wire_dtype", "f32"))
+        self.wire_block = comms.validate_wire_block(
+            getattr(cfg, "wire_block", 512))
+        if backend == "gossip" and self.wire_dtype == "int8":
+            raise ValueError(
+                "int8 wire compression needs the engine backend's error-"
+                "feedback state (SwarmState.wire); the mesh gossip path "
+                "supports wire_dtype f32/bf16")
+        # the comms cost model picks the sync schedule at trace time: for
+        # the gossip backend this decides which collectives propose lowers
+        # to; for host it reports the SPMD-equivalent wire cost (simulated)
+        per = 1 if backend != "gossip" else max(
+            1, cfg.n_nodes // mesh.shape[axis])
+        self.sync_schedule = comms.pick_schedule(
+            cfg, per=per, simulated=(backend != "gossip"))
         self._vstep = (None if train_step_fn is None
                        else jax.vmap(train_step_fn, in_axes=(0, 0, 0, None)))
         self._veval = None if eval_fn is None else jax.vmap(eval_fn)
@@ -382,11 +400,26 @@ class SwarmEngine:
                                          self_weight=self.cfg.self_weight)
 
     def _propose_gossip(self, stacked, active, fishers):
+        """Merge on the mesh, lowered to the collective schedule the comms
+        cost model picked at construction (`self.sync_schedule`):
+
+          fedavg_psum / fisher_psum       — global weighted psum(s)
+          ring_ppermute / ring_topo_...   — two point-to-point ppermutes
+          gathered_rows / gathered_topo_… — one all_gather + row contraction
+
+        Point-to-point schedules wire-cast their payloads per
+        ``cfg.wire_dtype`` (bf16 on the mesh; int8 EF is engine-backend)."""
         from repro.core import gossip
         from jax.sharding import PartitionSpec as P
 
         cfg, specs = self.cfg, self.param_specs
-        weights = self.data_sizes / self.data_sizes.sum()
+        sched = self.sync_schedule.name
+        wire = None if self.wire_dtype == "f32" else self.wire_dtype
+        # merge="mean" averages uniformly (host W is uniform); only fedavg
+        # folds dataset sizes into the psum weights
+        sizes = (self.data_sizes if cfg.merge == "fedavg"
+                 else np.ones(cfg.n_nodes))
+        weights = sizes / sizes.sum()
         if cfg.lora_only:
             payload, base = split_adapters(stacked)
             if specs is not None:
@@ -407,76 +440,163 @@ class SwarmEngine:
                  else jnp.asarray(active).astype(bool))
             fishers = self.strategy.finalize_mass(fishers, a)
             w = active_weights_traced(self.data_sizes, a)
-            if cfg.topology in ("ring", "dynamic"):
-                # topology-restricted weighted merge on the mesh: per-row
-                # ratio over graph-neighbour contributions only, matching
-                # the host backend's `topo_weighted_merge` oracle
-                rows = self.strategy.topo_rows(self._traced_W(a), w)
-                merged = gossip.topo_fisher_gossip(
-                    payload, fishers, rows, self.mesh, self.axis,
-                    inner_specs=specs, eps=self.strategy.eps)
-            else:
+            if sched == "fisher_psum":
                 # the strategy owns any weight-folding identity (gradmatch ≡
                 # w-weighted fisher ratio) — fisher_gossip's two psums do
                 # the rest
                 fishers = self.strategy.gossip_mass(fishers, w)
                 merged = gossip.fisher_gossip(payload, fishers, self.mesh,
                                               self.axis, inner_specs=specs)
-        elif cfg.topology == "ring" and active is None:
-            merged = gossip.ring_gossip(payload, self.mesh, self.axis,
-                                        self_weight=cfg.self_weight,
-                                        inner_specs=specs)
-        elif cfg.topology in ("ring", "dynamic") or active is not None:
+            else:
+                # topology-restricted weighted merge on the mesh: per-row
+                # ratio over graph-neighbour contributions only, matching
+                # the host backend's `topo_weighted_merge` oracle
+                rows = self.strategy.topo_rows(self._traced_W(a), w)
+                fn = (gossip.ring_topo_fisher_gossip
+                      if sched == "ring_topo_ppermute"
+                      else gossip.topo_fisher_gossip)
+                merged = fn(payload, fishers, rows, self.mesh, self.axis,
+                            inner_specs=specs, eps=self.strategy.eps,
+                            wire_dtype=wire)
+        elif sched == "fedavg_psum":
+            if active is None:
+                merged = gossip.fedavg_gossip(payload, weights, self.mesh,
+                                              self.axis, inner_specs=specs)
+            else:
+                # runtime membership stays on the psum schedule: weights are
+                # active-masked + renormalized in-graph, and absent nodes
+                # keep their own params in the candidate (same semantics as
+                # the masked mixing rows, at 2·P·(N−1)/N instead of N·P)
+                a = jnp.asarray(active).astype(bool)
+                w_active = active_weights_traced(sizes, a)
+                merged = gossip.fedavg_gossip(payload, w_active, self.mesh,
+                                              self.axis, inner_specs=specs)
+
+                def keep_absent(m, x):
+                    if m is None:
+                        return None
+                    ab = a.reshape((a.shape[0],) + (1,) * (m.ndim - 1))
+                    return jnp.where(ab, m, x)
+
+                merged = jax.tree.map(keep_absent, merged, payload,
+                                      is_leaf=lambda v: v is None)
+        else:
             # in-graph masking so a traced active mask works under jit too
             a = (jnp.ones((cfg.n_nodes,), bool) if active is None
                  else jnp.asarray(active).astype(bool))
             W = self._traced_W(a)
-            merged = gossip.matrix_gossip(payload, W, self.mesh, self.axis,
-                                          inner_specs=specs)
-        else:
-            merged = gossip.fedavg_gossip(payload, weights, self.mesh,
-                                          self.axis, inner_specs=specs)
+            if sched == "ring_ppermute":
+                merged = gossip.ring_rows_gossip(payload, W, self.mesh,
+                                                 self.axis, inner_specs=specs,
+                                                 wire_dtype=wire)
+            else:
+                merged = gossip.matrix_gossip(payload, W, self.mesh,
+                                              self.axis, inner_specs=specs,
+                                              wire_dtype=wire)
 
         return combine(merged, base) if cfg.lora_only else merged
 
     # -- gated sync ----------------------------------------------------------
 
-    def sync(self, params, val, active=None, stats=None):
-        """propose → in-graph validate → gate → fused commit. Pure/traceable."""
+    def _auto_wire(self, params, wire):
+        """Default EF wire reference when ``cfg.wire_dtype`` enables
+        compression but the caller didn't thread state (the direct engine
+        tuple API): a zero reference per call — stateless quantization, so
+        the knob is honoured (never a silent f32 no-op) even without the
+        session's carried ``SwarmState.wire``."""
+        if (wire is not None or self.backend != "host"
+                or self.wire_dtype == "f32"):
+            return wire
+        payload = (split_adapters(params)[0] if self.cfg.lora_only
+                   else params)
+        return comms.init_wire(payload)
+
+    def sync(self, params, val, active=None, stats=None, wire=None):
+        """propose → in-graph validate → gate → fused commit. Pure/traceable.
+
+        ``wire`` (engine/"host" backend only): the error-feedback wire
+        reference θ̂ from `core.comms` — peers merge the int8/bf16 wire
+        reconstruction θ̂' instead of the exact params, rejected nodes keep
+        exact f32 locals, and the commit runs through the fused Pallas
+        quantize→merge→dequantize kernel. The advanced reference is returned
+        in the log under ``"wire"``.
+        """
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
              else jnp.asarray(active).astype(bool))
-        candidate, W, imp = self.propose(params, active, stats=stats)
+        wire = self._auto_wire(params, wire)
+        use_wire = wire is not None and self.backend == "host"
+        log = {}
+        if use_wire:
+            if self.cfg.lora_only:
+                payload, base = split_adapters(params)
+            else:
+                payload, base = params, None
+            # θ̂' — what every peer reconstructs from this round's wire
+            # traffic; also next round's reference (EF: the residual θ−θ̂'
+            # is exactly this round's quantization error)
+            eff_payload = comms.wire_effective(payload, wire, self.wire_dtype,
+                                               self.wire_block)
+            eff = (combine(eff_payload, base) if base is not None
+                   else eff_payload)
+            fishers = None
+            if self.strategy.uses_stats:
+                f = (stats if stats is not None
+                     else jax.tree.map(jnp.zeros_like, params))
+                f = self.strategy.finalize_mass(f, a)
+                if self.cfg.lora_only:
+                    # only the payload's mass crosses the wire — don't burn
+                    # a full-model quantize pass on base leaves propose will
+                    # immediately discard
+                    f = split_adapters(f)[0]
+                # importance mass crosses the wire too (stateless round-trip:
+                # mass errors cancel in the merge ratio, no EF state needed;
+                # propose re-finalizes, which only rescales — the merge
+                # ratio is scale-free)
+                fishers = comms.quant_dequant_tree(f, self.wire_dtype,
+                                                   self.wire_block)
+            candidate, W, imp = self.propose(eff, active, fishers=fishers,
+                                             stats=None)
+        else:
+            candidate, W, imp = self.propose(params, active, stats=stats)
         metric_local = jnp.where(a, self._veval(params, val), 1.0)
         metric_merged = jnp.where(a, self._veval(candidate, val), 0.0)
         gates = gate_decisions(metric_merged, metric_local,
                                self.cfg.val_threshold) & a
-        if self.backend == "host":
+        if use_wire:
+            committed_payload, new_wire = fused_quant_merge_tree(
+                payload, wire, W, gates, imp=imp,
+                wire_dtype=self.wire_dtype, wire_block=self.wire_block,
+                block=self.block, interpret=self.interpret)
+            committed = (combine(committed_payload, base)
+                         if base is not None else committed_payload)
+            log["wire"] = new_wire
+        elif self.backend == "host":
             committed = host_commit(params, candidate, W, gates, self.cfg,
                                     imp=imp, block=self.block,
                                     interpret=self.interpret)
         else:
             committed = gated_commit(candidate, params, gates)
-        return committed, {"gates": gates, "metric_local": metric_local,
-                           "metric_merged": metric_merged}
+        return committed, dict(log, gates=gates, metric_local=metric_local,
+                               metric_merged=metric_merged)
 
     # -- jitted drivers ------------------------------------------------------
 
     def _round(self, params, opt_state, batches, val, active=None, step0=0,
-               stats=None):
+               stats=None, wire=None):
         """T local steps + one gated sync — a single compiled program."""
         if stats is None:
             stats = self.init_stats(params)
         params, opt_state, stats, train_metrics = self.local_steps(
             params, opt_state, batches, step0, stats)
-        params, log = self.sync(params, val, active, stats=stats)
+        params, log = self.sync(params, val, active, stats=stats, wire=wire)
         out = dict(log, train=train_metrics)
         if stats is not None:
             out["stats"] = stats
         return params, opt_state, out
 
     def _run_rounds(self, params, opt_state, batches, val, active=None,
-                    step0=0, stats=None):
+                    step0=0, stats=None, wire=None):
         """scan over R rounds of [R, T, N, ...] batches; no host round-trips.
 
         Fisher/gradmatch importance accumulators live inside the scan carry,
@@ -490,41 +610,50 @@ class SwarmEngine:
         t = jax.tree.leaves(batches)[0].shape[1]
         if stats is None:
             stats = self.init_stats(params)
+        # init the wire ref OUTSIDE the scan so the carry structure is
+        # round-invariant (and EF state actually accumulates across rounds)
+        wire = self._auto_wire(params, wire)
         step0 = jnp.asarray(step0, jnp.int32)
 
         if not self.cfg.overlap_sync:
             def body(carry, round_batches):
-                p, o, st, s = carry
+                p, o, st, wr, s = carry
                 p, o, st, tm = self.local_steps(p, o, round_batches, s, st)
-                p, log = self.sync(p, val, active, stats=st)
-                return (p, o, st, s + t), (tm, log)
+                p, log = self.sync(p, val, active, stats=st, wire=wr)
+                wr = log.pop("wire", wr)   # wire ref rides the carry, not
+                return (p, o, st, wr, s + t), (tm, log)  # the stacked logs
 
-            init = (params, opt_state, stats, step0)
-            (p, o, st, _), (train_metrics, logs) = jax.lax.scan(
+            init = (params, opt_state, stats, wire, step0)
+            (p, o, st, wr, _), (train_metrics, logs) = jax.lax.scan(
                 body, init, batches)
             if st is not None:   # final accumulators, for chunked callers
                 logs = dict(logs, stats=st)
+            if wr is not None:
+                logs = dict(logs, wire=wr)
             return p, o, train_metrics, logs
 
         def body(carry, round_batches):
-            p, o, st, s, pending = carry
+            p, o, st, wr, s, pending = carry
             # local steps depend on the previous round's LOCAL params (plus
             # the already-available stale delta) — never on the in-flight
             # merge, so the sync below can overlap them on hardware.
             p_loc, o, st, tm = self.local_steps(p, o, round_batches, s, st)
-            committed, log = self.sync(p_loc, val, active, stats=st)
+            committed, log = self.sync(p_loc, val, active, stats=st, wire=wr)
+            wr = log.pop("wire", wr)
             delta = jax.tree.map(lambda c, l: c - l, committed, p_loc)
             p_next = jax.tree.map(lambda l, d: l + d, p_loc, pending)
-            return (p_next, o, st, s + t, delta), (tm, log)
+            return (p_next, o, st, wr, s + t, delta), (tm, log)
 
         zeros = jax.tree.map(jnp.zeros_like, params)
-        init = (params, opt_state, stats, step0, zeros)
-        (p, o, st, _, pending), (train_metrics, logs) = jax.lax.scan(
+        init = (params, opt_state, stats, wire, step0, zeros)
+        (p, o, st, wr, _, pending), (train_metrics, logs) = jax.lax.scan(
             body, init, batches)
         # fold in the last round's commit so no accepted merge is dropped
         p = jax.tree.map(lambda l, d: l + d, p, pending)
         if st is not None:       # final accumulators, for chunked callers
             logs = dict(logs, stats=st)
+        if wr is not None:
+            logs = dict(logs, wire=wr)
         return p, o, train_metrics, logs
 
     def _run_local(self, params, opt_state, batches, step0=0, stats=None):

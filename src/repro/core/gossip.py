@@ -12,9 +12,18 @@ sharded over a mesh axis (the swarm axis — `node` single-pod, `pod` multi-pod)
     paper's pairwise peer exchange, and the beyond-paper §Perf winner.
   * ``matrix_gossip``   — arbitrary (possibly dynamic-membership) mixing
     matrix via all_gather + local contraction; the faithful general form.
+  * ``ring_rows_gossip`` / ``ring_topo_fisher_gossip`` — ring-native
+    schedules: two ``ppermute`` shifts honouring (possibly traced) ring
+    mixing rows, 2·P / 4·P point-to-point values per sync instead of the
+    gathered forms' N·P / 2·N·P. ``topo_fisher_gossip`` is the general-rows
+    fallback — ONE all_gather of the fused ``(F⊙θ ⊕ F)`` stack.
 
-All three return a stacked pytree of the same structure. `None` leaves (the
-non-payload part when lora_only sync is active) pass through untouched.
+Which schedule a given config lowers to is decided by the `core.comms` cost
+model (`comms.pick_schedule`); ``wire_dtype`` compresses point-to-point
+payloads (bf16 on the mesh; int8 error-feedback lives on the engine backend).
+
+All schedules return a stacked pytree of the same structure. `None` leaves
+(the non-payload part when lora_only sync is active) pass through untouched.
 """
 from __future__ import annotations
 
@@ -59,6 +68,22 @@ def _mapped(fn, mesh, axis, stacked, *extra, inner_specs=None):
     if inner_specs is None:
         inner_specs = jax.tree.map(lambda x: None, stacked, is_leaf=nones)
     return jax.tree.map(leaf_fn, stacked, inner_specs, is_leaf=nones)
+
+
+def _wire_cast(z, wire_dtype):
+    """Cast a payload for the wire (point-to-point collectives only).
+
+    bf16 halves link bytes; accumulation stays f32 after decode. int8 needs
+    the engine backend's error-feedback state (`core.comms`) — a stateless
+    int8 mesh wire would silently drop mass, so it is refused here.
+    """
+    if wire_dtype in (None, "f32"):
+        return z
+    if wire_dtype == "bf16":
+        return z.astype(jnp.bfloat16)
+    raise ValueError(f"wire_dtype {wire_dtype!r} is not supported on the "
+                     "mesh gossip path (int8 needs error-feedback state; "
+                     "use the engine backend)")
 
 
 def fedavg_gossip(stacked, weights, mesh, axis: str, inner_specs=None):
@@ -126,49 +151,162 @@ def fisher_gossip(stacked, fishers, mesh, axis: str, inner_specs=None,
     return jax.tree.map(leaf_fn, stacked, fishers, inner_specs, is_leaf=nones)
 
 
+def _fisher_pair_map(fn, mesh, axis, stacked, fishers, extra, inner_specs):
+    """shard_map fn(x, fisher, *extra) leaf-wise over (params, mass) pairs;
+    extras are replicated (P()); None leaves pass through."""
+    nones = lambda v: v is None
+
+    def leaf_fn(x, fsh, spec):
+        if x is None:
+            return None
+        in_spec = P(axis, *(tuple(spec) if spec is not None else ()))
+        return shard_map(fn, mesh,
+                         in_specs=(in_spec, in_spec)
+                         + tuple(P() for _ in extra),
+                         out_specs=in_spec)(x, fsh, *extra)
+
+    if inner_specs is None:
+        inner_specs = jax.tree.map(lambda v: None, stacked, is_leaf=nones)
+    return jax.tree.map(leaf_fn, stacked, fishers, inner_specs, is_leaf=nones)
+
+
 def topo_fisher_gossip(stacked, fishers, rows, mesh, axis: str,
-                       inner_specs=None, eps: float = 1e-8):
+                       inner_specs=None, eps: float = 1e-8, wire_dtype=None):
     """Topology-restricted importance-weighted merge over the swarm axis:
 
         θ*_i = Σ_j rows[i,j]·(F_j+eps)⊙θ_j / Σ_j rows[i,j]·(F_j+eps)
 
     The SPMD realization of `merge_impl.topo_weighted_merge` — ring/dynamic
-    swarms merge only graph-neighbour contributions. Lowering: all_gather of
-    the importance-weighted numerator and the mass, then a local per-row
-    contraction (two `matrix_gossip` passes share the mixing machinery)."""
-    nones = lambda v: v is None
+    swarms merge only graph-neighbour contributions. Lowering: the
+    importance-weighted numerator and the mass are stacked into ONE
+    ``(num ⊕ mass)`` payload and moved by a SINGLE ``all_gather`` per leaf
+    (2·N·P values at the wire dtype), then contracted locally per row —
+    the general-rows form; ring rows take the 4·P two-``ppermute`` schedule
+    (:func:`ring_topo_fisher_gossip`) instead."""
+    n = mesh.shape[axis]
 
-    def wnum(x, f):
-        if x is None:
-            return None
-        return (f.astype(jnp.float32) + eps) * x.astype(jnp.float32)
+    def f(x, fsh, Wm):  # x/fsh: [per, ...] local shard; Wm: [N, N]
+        idx = jax.lax.axis_index(axis)
+        per = x.shape[0]
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        z = jnp.concatenate([ff * xf, ff], axis=0)          # [2·per, ...]
+        allz = jax.lax.all_gather(_wire_cast(z, wire_dtype), axis,
+                                  tiled=True).astype(jnp.float32)
+        pair = allz.reshape(n, 2, per, -1)                   # shard-major
+        num_all = pair[:, 0].reshape(n * per, -1)            # [N, D]
+        den_all = pair[:, 1].reshape(n * per, -1)
+        r = jax.lax.dynamic_slice_in_dim(Wm, idx * per, per, 0)  # [per, N]
+        num = r @ num_all
+        den = r @ den_all
+        out = num / jnp.maximum(den, 1e-30)
+        return out.reshape((per,) + x.shape[1:]).astype(x.dtype)
 
-    def wden(x, f):
-        if x is None:
-            return None
-        return jnp.broadcast_to(f.astype(jnp.float32) + eps, x.shape)
-
-    num = matrix_gossip(jax.tree.map(wnum, stacked, fishers, is_leaf=nones),
-                        rows, mesh, axis, inner_specs=inner_specs)
-    den = matrix_gossip(jax.tree.map(wden, stacked, fishers, is_leaf=nones),
-                        rows, mesh, axis, inner_specs=inner_specs)
-
-    def ratio(x, n, d):
-        if x is None:
-            return None
-        return (n / jnp.maximum(d, 1e-30)).astype(x.dtype)
-
-    return jax.tree.map(ratio, stacked, num, den, is_leaf=nones)
+    Wj = jnp.asarray(rows, jnp.float32)
+    return _fisher_pair_map(f, mesh, axis, stacked, fishers, (Wj,),
+                            inner_specs)
 
 
-def matrix_gossip(stacked, W, mesh, axis: str, inner_specs=None):
+def _ring_perms(n: int):
+    """(receive-from-left, receive-from-right) ppermute pairs."""
+    fwd = [(i, (i + 1) % n) for i in range(n)]   # data flows i -> i+1
+    bwd = [(i, (i - 1) % n) for i in range(n)]   # data flows i -> i-1
+    return fwd, bwd
+
+
+def _check_one_node_per_shard(stacked, mesh, axis, what: str):
+    n = mesh.shape[axis]
+    lead = jax.tree.leaves(stacked)[0].shape[0]
+    if lead != n:
+        raise ValueError(
+            f"{what} needs one node per mesh shard (leading axis {lead} vs "
+            f"mesh axis {axis}={n}); use the gathered fallback for per>1")
+    if n < 3:
+        raise ValueError(f"{what} needs N >= 3 (an N=2 ring folds both "
+                         f"neighbour edges onto one peer); got N={n}")
+
+
+def ring_rows_gossip(stacked, W, mesh, axis: str, inner_specs=None,
+                     wire_dtype=None):
+    """Ring-native mixing-row gossip (mean/fedavg on a ring):
+
+        θ*_i = W[i,i]·θ_i + W[i,i−1]·θ_{i−1} + W[i,i+1]·θ_{i+1}
+
+    Two ``ppermute`` shifts move 2·P point-to-point values per device — no
+    global collective — while honouring a (possibly traced, membership-
+    masked) ring mixing matrix, unlike :func:`ring_gossip`'s fixed
+    self-weight. Only neighbour payloads are wire-cast; the self term stays
+    exact local precision. Requires one node per shard and N ≥ 3."""
+    _check_one_node_per_shard(stacked, mesh, axis, "ring_rows_gossip")
+    n = mesh.shape[axis]
+    fwd, bwd = _ring_perms(n)
+
+    def f(x, Wm):  # x: [1, ...] this node's shard; Wm: [N, N]
+        idx = jax.lax.axis_index(axis)
+        z = _wire_cast(x, wire_dtype)
+        left = jax.lax.ppermute(z, axis, fwd).astype(jnp.float32)
+        right = jax.lax.ppermute(z, axis, bwd).astype(jnp.float32)
+        w_self = Wm[idx, idx]
+        w_left = Wm[idx, (idx - 1) % n]
+        w_right = Wm[idx, (idx + 1) % n]
+        out = (w_self * x.astype(jnp.float32) + w_left * left
+               + w_right * right)
+        return out.astype(x.dtype)
+
+    return _mapped(f, mesh, axis, stacked, jnp.asarray(W, jnp.float32),
+                   inner_specs=inner_specs)
+
+
+def ring_topo_fisher_gossip(stacked, fishers, rows, mesh, axis: str,
+                            inner_specs=None, eps: float = 1e-8,
+                            wire_dtype=None):
+    """Ring-native topology-restricted weighted merge — the wire-optimal
+    form of :func:`topo_fisher_gossip` for ring mixing rows:
+
+        θ*_i = Σ_{j∈{i−1,i,i+1}} rows[i,j]·(F_j+eps)⊙θ_j
+             / Σ_{j∈{i−1,i,i+1}} rows[i,j]·(F_j+eps)
+
+    Each node fuses its importance-weighted numerator and mass into one
+    ``(F⊙θ ⊕ F)`` side-channel payload and ppermutes it to both ring
+    neighbours: ~4·P point-to-point values per sync instead of the gathered
+    form's 2·N·P. Self contributions never touch the wire (exact f32).
+    Requires one node per shard and N ≥ 3 (ring rows only have the three
+    per-row entries this schedule exchanges)."""
+    _check_one_node_per_shard(stacked, mesh, axis, "ring_topo_fisher_gossip")
+    n = mesh.shape[axis]
+    fwd, bwd = _ring_perms(n)
+
+    def f(x, fsh, Wm):  # x/fsh: [1, ...]; Wm: [N, N] ring-structured rows
+        idx = jax.lax.axis_index(axis)
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        y = ff * xf                                   # numerator payload
+        z = _wire_cast(jnp.concatenate([y, ff], axis=0), wire_dtype)  # [2,...]
+        left = jax.lax.ppermute(z, axis, fwd).astype(jnp.float32)
+        right = jax.lax.ppermute(z, axis, bwd).astype(jnp.float32)
+        r_self = Wm[idx, idx]
+        r_left = Wm[idx, (idx - 1) % n]
+        r_right = Wm[idx, (idx + 1) % n]
+        num = r_self * y + r_left * left[0:1] + r_right * right[0:1]
+        den = r_self * ff + r_left * left[1:2] + r_right * right[1:2]
+        return (num / jnp.maximum(den, 1e-30)).astype(x.dtype)
+
+    Wj = jnp.asarray(rows, jnp.float32)
+    return _fisher_pair_map(f, mesh, axis, stacked, fishers, (Wj,),
+                            inner_specs)
+
+
+def matrix_gossip(stacked, W, mesh, axis: str, inner_specs=None,
+                  wire_dtype=None):
     """General mixing matrix (dynamic membership): all_gather + local row mix."""
     n = mesh.shape[axis]
 
     def f(x, Wm):  # x: [per, ...]; Wm: [N, N]
         idx = jax.lax.axis_index(axis)
         per = x.shape[0]
-        allx = jax.lax.all_gather(x.astype(jnp.float32), axis, tiled=True)  # [N, ...]
+        allx = jax.lax.all_gather(
+            _wire_cast(x.astype(jnp.float32), wire_dtype), axis,
+            tiled=True).astype(jnp.float32)                             # [N, ...]
         rows = jax.lax.dynamic_slice_in_dim(Wm, idx * per, per, 0)          # [per, N]
         flat = allx.reshape(allx.shape[0], -1)
         out = rows @ flat

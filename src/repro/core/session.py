@@ -37,6 +37,7 @@ counters — through `checkpointing.io`.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
@@ -46,9 +47,12 @@ import numpy as np
 
 from repro.checkpointing import load_metadata, load_pytree, save_pytree
 from repro.configs.base import SwarmConfig
+from repro.core import comms
 from repro.core import merge_impl as merge_lib
 from repro.core.engine import SwarmEngine
 from repro.kernels.fused_merge import DEFAULT_BLOCK
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -57,15 +61,18 @@ class SwarmState:
 
     params / opt_state / stats are **stacked** pytrees (leading node axis N);
     ``stats`` carries the merge strategy's importance accumulators (None for
-    mean/fedavg). ``active`` is the runtime membership mask, ``rng`` a
-    (legacy uint32) PRNG key folded once per round, ``round``/``step`` the
-    global counters. All fields are data — membership changes, resumed
-    counters, and reseeded rngs never trigger a recompile.
+    mean/fedavg). ``wire`` is the quantized-sync error-feedback reference θ̂
+    (`core.comms`; None unless ``cfg.wire_dtype`` enables wire compression).
+    ``active`` is the runtime membership mask, ``rng`` a (legacy uint32)
+    PRNG key folded once per round, ``round``/``step`` the global counters.
+    All fields are data — membership changes, resumed counters, and reseeded
+    rngs never trigger a recompile.
     """
 
     params: Any
     opt_state: Any = None
     stats: Any = None
+    wire: Any = None
     active: Any = None
     rng: Any = None
     round: Any = 0
@@ -74,8 +81,8 @@ class SwarmState:
 
 jax.tree_util.register_dataclass(
     SwarmState,
-    data_fields=["params", "opt_state", "stats", "active", "rng", "round",
-                 "step"],
+    data_fields=["params", "opt_state", "stats", "wire", "active", "rng",
+                 "round", "step"],
     meta_fields=[])
 
 
@@ -143,6 +150,13 @@ class SwarmSession:
         if stacked_params is None:
             raise ValueError("SwarmSession needs initial params")
         rng = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        wire_dtype = comms.validate_wire_dtype(
+            getattr(cfg, "wire_dtype", "f32"))
+        if wire_dtype != "f32" and backend == "host":
+            raise ValueError(
+                "wire_dtype compression needs a compiled backend "
+                '(backend="engine" carries the error-feedback state; '
+                '"gossip" supports bf16); the host loop is uncompressed')
 
         if backend == "host":
             from repro.core.swarm import NodeState, SwarmLearner
@@ -158,6 +172,11 @@ class SwarmSession:
             self._rng = rng
             self._round_ct = 0
             self.engine = None
+            self.sync_schedule = comms.pick_schedule(cfg, simulated=True)
+            self.payload_params = comms.payload_param_count(
+                stacked_params, cfg.lora_only, n)
+            self.predicted_sync_bytes = self.sync_schedule.bytes_per_sync(
+                self.payload_params)
             return
 
         self.engine = SwarmEngine(
@@ -165,11 +184,28 @@ class SwarmSession:
             backend="gossip" if backend == "gossip" else "host",
             mesh=mesh, axis=axis, param_specs=param_specs, block=block,
             interpret=interpret, strategy=strategy)
+        wire = None
+        if wire_dtype != "f32" and backend == "engine":
+            # error-feedback reference θ̂ for the quantized wire — shaped
+            # like the sync payload (adapters only under lora_only)
+            payload = stacked_params
+            if cfg.lora_only:
+                from repro.core.lora import split_adapters
+                payload = split_adapters(stacked_params)[0]
+            wire = comms.init_wire(payload)
         self._state = SwarmState(
             params=stacked_params, opt_state=stacked_opt,
-            stats=self.engine.init_stats(stacked_params),
+            stats=self.engine.init_stats(stacked_params), wire=wire,
             active=jnp.ones((n,), bool), rng=rng,
             round=jnp.asarray(0, jnp.int32), step=jnp.asarray(0, jnp.int32))
+        # cost-model-driven schedule choice, surfaced for logs/benchmarks
+        self.sync_schedule = self.engine.sync_schedule
+        self.payload_params = comms.payload_param_count(
+            stacked_params, cfg.lora_only, n)
+        self.predicted_sync_bytes = self.sync_schedule.bytes_per_sync(
+            self.payload_params)
+        logger.info("sync schedule: %s",
+                    self.sync_schedule.describe(self.payload_params))
         # the three compiled drivers; the state buffer is donated, so every
         # call consumes self._state and replaces it with the result
         self._round_jit = jax.jit(self._round_impl, donate_argnums=(0,))
@@ -271,10 +307,11 @@ class SwarmSession:
         t = jax.tree.leaves(batches)[0].shape[0]
         p, o, out = self.engine._round(state.params, state.opt_state, batches,
                                        val, state.active, state.step,
-                                       state.stats)
+                                       state.stats, state.wire)
         st = out.pop("stats", None)
+        wr = out.pop("wire", state.wire)
         new = SwarmState(
-            params=p, opt_state=o, stats=st, active=state.active,
+            params=p, opt_state=o, stats=st, wire=wr, active=state.active,
             rng=jax.random.fold_in(state.rng, state.round),
             round=state.round + 1, step=state.step + t)
         return new, out
@@ -284,14 +321,15 @@ class SwarmSession:
         r, t = shape[0], shape[1]
         p, o, tm, logs = self.engine._run_rounds(
             state.params, state.opt_state, batches, val, state.active,
-            state.step, state.stats)
+            state.step, state.stats, state.wire)
         st = logs.pop("stats", None)
+        wr = logs.pop("wire", state.wire)
         rng = state.rng
         for i in range(r):  # same per-round folds as r successive round()s
             rng = jax.random.fold_in(rng, state.round + i)
         new = SwarmState(
-            params=p, opt_state=o, stats=st, active=state.active, rng=rng,
-            round=state.round + r, step=state.step + r * t)
+            params=p, opt_state=o, stats=st, wire=wr, active=state.active,
+            rng=rng, round=state.round + r, step=state.step + r * t)
         return new, tm, logs
 
     def _local_impl(self, state: SwarmState, batches):
@@ -366,7 +404,8 @@ class SwarmSession:
         """Restore a checkpoint into this session (same cfg/param shapes)."""
         meta = load_metadata(path)
         saved_cfg = meta.get("cfg", {})
-        for key in ("n_nodes", "merge", "topology", "lora_only"):
+        for key in ("n_nodes", "merge", "topology", "lora_only",
+                    "wire_dtype"):
             if key in saved_cfg and saved_cfg[key] != getattr(self.cfg, key):
                 raise ValueError(
                     f"checkpoint cfg mismatch: {key}={saved_cfg[key]!r} "

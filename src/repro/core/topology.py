@@ -127,6 +127,22 @@ def mixing_matrix_traced(topology: str, active, *, weights=None,
     return dynamic_matrix_traced(base, a)
 
 
+def ring_structured(W: np.ndarray) -> bool:
+    """True iff W only couples ring neighbours: W[i,j] == 0 whenever j is
+    neither i nor i±1 (mod N). The invariant the ring-native two-``ppermute``
+    gossip schedules (`core.gossip.ring_rows_gossip` /
+    ``ring_topo_fisher_gossip``) rely on — membership masking
+    (:func:`dynamic_matrix`) preserves it, because masking only zeroes and
+    renormalizes entries. Host-side check for tests and debugging."""
+    W = np.asarray(W)
+    n = W.shape[0]
+    idx = np.arange(n)
+    allowed = np.zeros((n, n), bool)
+    for off in (-1, 0, 1):
+        allowed[idx, (idx + off) % n] = True
+    return bool(np.all(W[~allowed] == 0.0))
+
+
 def spectral_gap(W: np.ndarray) -> float:
     """1 - |λ₂|: per-round contraction rate of disagreement under gossip."""
     eig = np.linalg.eigvals(W)

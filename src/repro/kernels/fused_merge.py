@@ -44,6 +44,27 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 16_384  # 4 nodes × 16k × 4B = 256 KiB VMEM working set
 
+# VMEM working-set budget for auto block sizing: ~16 MB/core total, leave
+# room for double buffering + compiler scratch.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def auto_block(n: int, streams: int, *, out_rows: int = 1,
+               block: int = DEFAULT_BLOCK, budget: int = VMEM_BUDGET,
+               align: int = 128) -> int:
+    """Largest tile width whose VMEM working set fits the budget.
+
+    A grid step holds ``streams`` input tiles of [N, block] plus ``out_rows``
+    output rows of [block] — (streams·N + out_rows)·block·4 bytes. The old
+    fixed DEFAULT_BLOCK ignored both N and the extra importance stream, so a
+    64-node fisher commit wanted (2·64+1)·16384·4 ≈ 8.5 MB of VMEM per step.
+    Returns min(requested block, budget-derived cap), multiple of ``align``
+    (lane width), floored at ``align``.
+    """
+    rows = streams * n + out_rows
+    cap = budget // (rows * 4)
+    return min(block, max(align, cap // align * align))
+
 
 def _merge_kernel(x_ref, w_ref, gate_ref, self_idx_ref, o_ref):
     """x [N, B] tile; w [N]; gate/self_idx scalars (SMEM); o [B] tile."""
@@ -65,7 +86,7 @@ def fused_merge(stacked, weights, self_idx, gate, *, block: int = DEFAULT_BLOCK,
     acceptance); self_idx: this node's row. D is padded to a block multiple.
     """
     n, d = stacked.shape
-    block = min(block, max(128, d))
+    block = min(auto_block(n, 1, block=block), max(128, d))
     pad = (-d) % block
     if pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
@@ -130,9 +151,14 @@ def fused_merge_all(stacked, W, gates, imp=None, *, block: int = DEFAULT_BLOCK,
     imp: optional [N, D] per-element importance weights — switches to the
     normalized weighted merge  Σ_j W[i,j]·imp[j]⊙θ_j / Σ_j W[i,j]·imp[j]
     (fisher / gradmatch commits), still one pass over the tile.
+
+    The tile width is auto-capped so the VMEM working set — one [N, BLOCK]
+    tile per input stream (two with ``imp``) plus the output row — fits
+    `VMEM_BUDGET` regardless of swarm size N (see :func:`auto_block`).
     """
     n, d = stacked.shape
-    block = min(block, max(128, d))
+    block = min(auto_block(n, 1 if imp is None else 2, block=block),
+                max(128, d))
     pad = (-d) % block
     if pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
@@ -160,6 +186,157 @@ def fused_merge_all(stacked, W, gates, imp=None, *, block: int = DEFAULT_BLOCK,
         interpret=interpret,
     )(*operands)
     return out[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# quantized-wire commit: quantize -> merge -> dequantize in one VMEM pass
+# ---------------------------------------------------------------------------
+
+def _quant_block(v, wire_dtype: str, wire_block: int):
+    """Deterministic per-(node, wire-block) quantize→dequantize of [N, B]
+    (B a multiple of wire_block). Must stay arithmetic-identical to
+    `core.comms._leaf_quant_dequant` — the XLA ground truth the candidate
+    (gate) path computes."""
+    if wire_dtype == "f32":
+        return v
+    if wire_dtype == "bf16":
+        return v.astype(jnp.bfloat16).astype(jnp.float32)
+    n, b = v.shape
+    blocks = v.reshape(n, b // wire_block, wire_block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.where(scale > 0, scale, 1.0)),
+                 -127.0, 127.0)
+    return (q * scale).reshape(n, b)
+
+
+def _quant_merge_kernel(x_ref, r_ref, w_ref, g_ref, o_ref, ro_ref, *,
+                        wire_dtype, wire_block):
+    """x (local params) / r (wire reference θ̂): [N, B] tiles; w: [N, N];
+    g: [N]; outputs: o committed [N, B], ro new reference [N, B].
+
+    One VMEM pass per column block: quantize the EF delta v = x − θ̂ (per-
+    wire-block int8 scales or bf16 cast), advance the reference, contract
+    every node's mixing row against the dequantized payload, gate-select
+    against the EXACT local row — the wire round-trip, merge, and gate never
+    touch HBM between each other."""
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    rp = r + _quant_block(x - r, wire_dtype, wire_block)
+    w = w_ref[...].astype(jnp.float32)                      # [N, N]
+    merged = jax.lax.dot(w, rp, precision=jax.lax.Precision.HIGHEST)
+    g = g_ref[...] != 0                                     # [N]
+    o_ref[...] = jnp.where(g[:, None], merged, x).astype(o_ref.dtype)
+    ro_ref[...] = rp
+
+
+def _quant_merge_imp_kernel(x_ref, r_ref, f_ref, w_ref, g_ref, o_ref, ro_ref,
+                            *, wire_dtype, wire_block):
+    """Importance-weighted form: merged = W·(imp⊙θ̂') / W·imp per element
+    (fisher / gradmatch / topology-restricted rows), same single pass."""
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    rp = r + _quant_block(x - r, wire_dtype, wire_block)
+    f = f_ref[...].astype(jnp.float32)                      # [N, B]
+    w = w_ref[...].astype(jnp.float32)                      # [N, N]
+    hi = jax.lax.Precision.HIGHEST
+    num = jax.lax.dot(w, f * rp, precision=hi)
+    den = jax.lax.dot(w, f, precision=hi)
+    merged = num / jnp.maximum(den, 1e-30)
+    g = g_ref[...] != 0
+    o_ref[...] = jnp.where(g[:, None], merged, x).astype(o_ref.dtype)
+    ro_ref[...] = rp
+
+
+@functools.partial(jax.jit, static_argnames=("wire_dtype", "wire_block",
+                                             "block", "interpret"))
+def fused_quant_merge_all(stacked, wire_ref, W, gates, imp=None, *,
+                          wire_dtype: str = "int8", wire_block: int = 512,
+                          block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """Quantized-wire commit: [N, D] params + [N, D] wire reference →
+    (committed [N, D], new reference [N, D]).
+
+    Fuses the error-feedback wire round-trip (quantize the delta against the
+    reference copy θ̂, per-``wire_block`` scales, dequantize), the mixing-row
+    (optionally importance-weighted) contraction, and the validation gate
+    into one VMEM pass per column block — the wire-compressed sibling of
+    :func:`fused_merge_all`. Rejected rows keep the EXACT f32 local params;
+    the reference always advances (the wire traffic happened either way).
+
+    The tile is sized by :func:`auto_block` counting every stream — params,
+    reference, optional importance in; committed + reference out — then
+    aligned down to a ``wire_block`` multiple so in-kernel scale blocks land
+    on the same global grid as the XLA ground truth (`core.comms`).
+    """
+    n, d = stacked.shape
+    streams = 2 if imp is None else 3
+    block = auto_block(n, streams, out_rows=2 * n, block=block,
+                       align=wire_block)
+    block = max(wire_block, block // wire_block * wire_block)
+    # don't pad small leaves (lora_scale, biases) out to the full tile —
+    # cap at d rounded up to the wire-block grid
+    block = min(block, -(-d // wire_block) * wire_block)
+    pad = (-d) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        wire_ref = jnp.pad(wire_ref, ((0, 0), (0, pad)))
+        if imp is not None:
+            imp = jnp.pad(imp, ((0, 0), (0, pad)))
+    dp = d + pad
+
+    tile = pl.BlockSpec((n, block), lambda j: (0, j))
+    operands = [stacked, jnp.asarray(wire_ref, jnp.float32)]
+    in_specs = [tile, tile]
+    if imp is not None:
+        operands.append(jnp.asarray(imp, jnp.float32))
+        in_specs.append(tile)
+    operands += [jnp.asarray(W, jnp.float32),
+                 jnp.asarray(gates).astype(jnp.int32)]
+    in_specs += [pl.BlockSpec((n, n), lambda j: (0, 0)),
+                 pl.BlockSpec((n,), lambda j: (0,))]
+
+    kern = functools.partial(
+        _quant_merge_kernel if imp is None else _quant_merge_imp_kernel,
+        wire_dtype=wire_dtype, wire_block=wire_block)
+    committed, new_ref = pl.pallas_call(
+        kern,
+        grid=(dp // block,),
+        in_specs=in_specs,
+        out_specs=(tile, tile),
+        out_shape=(jax.ShapeDtypeStruct((n, dp), stacked.dtype),
+                   jax.ShapeDtypeStruct((n, dp), jnp.float32)),
+        interpret=interpret,
+    )(*operands)
+    return committed[:, :d], new_ref[:, :d]
+
+
+def fused_quant_merge_tree(stacked_tree, wire_tree, W, gates, imp=None, **kw):
+    """Leaf-wise :func:`fused_quant_merge_all` over stacked pytrees.
+
+    Returns ``(committed_tree, new_wire_tree)``; None leaves (non-payload
+    when lora_only sync is active) pass through as None in both. Flattens
+    explicitly so params trees containing structural tuples can't be
+    confused with the per-leaf (committed, reference) pairs."""
+    nones = lambda v: v is None
+    xs, treedef = jax.tree_util.tree_flatten(stacked_tree, is_leaf=nones)
+    rs = jax.tree_util.tree_flatten(wire_tree, is_leaf=nones)[0]
+    fs = ([None] * len(xs) if imp is None
+          else jax.tree_util.tree_flatten(imp, is_leaf=nones)[0])
+
+    committed, new_wire = [], []
+    for x, r, f in zip(xs, rs, fs):
+        if x is None:
+            committed.append(None)
+            new_wire.append(None)
+            continue
+        n = x.shape[0]
+        c, nr = fused_quant_merge_all(
+            x.reshape(n, -1), jnp.asarray(r, jnp.float32).reshape(n, -1),
+            W, gates, None if f is None else jnp.asarray(f).reshape(n, -1),
+            **kw)
+        committed.append(c.reshape(x.shape))
+        new_wire.append(nr.reshape(x.shape))
+    return (jax.tree_util.tree_unflatten(treedef, committed),
+            jax.tree_util.tree_unflatten(treedef, new_wire))
 
 
 def fused_merge_tree(stacked_tree, weights, self_idx, gate, imp=None, **kw):

@@ -148,6 +148,10 @@ def main():
                     choices=["mean", "fedavg", "fisher", "gradmatch"])
     ap.add_argument("--lora", action="store_true",
                     help="LoRA-adapter-only peer payloads (paper §3.2)")
+    ap.add_argument("--wire-dtype", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="sync wire compression (core.comms): int8 = "
+                         "error-feedback quantized deltas")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", default="",
                     help="resume a swarm run from a session checkpoint "
@@ -211,13 +215,15 @@ def main():
 
         scfg = SwarmConfig(n_nodes=n_nodes, sync_every=args.sync_every,
                            topology=args.topology, merge=args.merge,
-                           lora_only=args.lora)
+                           lora_only=args.lora, wire_dtype=args.wire_dtype)
         # fisher/gradmatch importance accumulators live inside the session's
         # SwarmState — estimation is in-graph, no host-side Fisher loop
         sess = SwarmSession(scfg, train_step, eval_fn, params=ps,
                             opt_state=[adamw_init(p) for p in ps],
                             seed=args.seed,
                             data_sizes=[len(s["tokens"]) for s in streams])
+        print(f"sync schedule: "
+              f"{sess.sync_schedule.describe(sess.payload_params)}")
         if args.resume:
             sess.load(args.resume)
             final_step = int(sess.state.step)

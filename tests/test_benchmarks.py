@@ -1,6 +1,7 @@
 """`benchmarks/run.py --smoke` must keep working: every benchmark family has
 a seconds-scale entry point, so the harness can't silently rot. One
 subprocess runs the whole smoke suite; assertions read its CSV output."""
+import json
 import os
 import subprocess
 import sys
@@ -8,6 +9,13 @@ import sys
 import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _row(smoke_out, name):
+    for line in smoke_out.splitlines():
+        if line.startswith(name + ","):
+            return line.split(",", 2)
+    raise AssertionError(f"no {name} row")
 
 
 @pytest.fixture(scope="module")
@@ -53,6 +61,39 @@ def test_smoke_covers_overlap_round(smoke_out):
     assert "engine_round_serial_us" in smoke_out
     assert "engine_round_overlap_us" in smoke_out
     assert "overlap_vs_serial_ratio" in smoke_out
+
+
+def test_smoke_covers_swarm_sync_suite(smoke_out):
+    """The wire-efficiency suite reports schedule + predicted bytes per
+    combo and writes machine-readable BENCH_swarm_sync.json."""
+    assert "sched=ring_topo_ppermute" in smoke_out
+    assert "sched=gathered_topo_stack" in smoke_out
+    path = _row(smoke_out, "swarm_sync_json")[2].strip()
+    assert os.path.exists(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == 1
+    rows = doc["schedules_smoke"]   # smoke keeps its own section: CI must
+    assert len(rows) >= 4           # not clobber the committed full grid
+    by_key = {(r["topology"], r["merge"], r["wire_dtype"]): r for r in rows}
+    ring_f32 = by_key[("ring", "fisher", "f32")]
+    ring_i8 = by_key[("ring", "fisher", "int8")]
+    # ring topo-fisher: 4·P values; int8 wire shrinks predicted bytes ~4x
+    p = ring_f32["payload_params"]
+    assert ring_f32["predicted_bytes_per_sync"] == pytest.approx(16 * p)
+    assert ring_i8["predicted_bytes_per_sync"] < ring_f32[
+        "predicted_bytes_per_sync"] / 3
+    assert doc["ring_parity_smoke"]  # subprocess rows made it into the JSON
+
+
+def test_smoke_covers_ring_sync_parity(smoke_out):
+    """Forced-CPU-mesh ring-ppermute parity: committed params within 1e-5
+    of the host oracle, and the collective-bytes estimator confirms the
+    ~4·P point-to-point schedule vs the gather's 2·N·P."""
+    assert float(_row(smoke_out, "ring_sync_ppermute_max_diff")[2]) < 1e-5
+    assert float(_row(smoke_out, "ring_sync_gathered_max_diff")[2]) < 1e-5
+    assert float(_row(smoke_out, "ring_sync_ppermute_P_values")[2]) <= 4.5
+    assert float(_row(smoke_out, "ring_sync_bytes_ratio")[2]) < 1.0
 
 
 def test_smoke_covers_dynamic_membership(smoke_out):

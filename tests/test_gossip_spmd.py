@@ -76,6 +76,49 @@ np.testing.assert_allclose(np.asarray(out), np.asarray(fisher_merge(x, f)["w"]),
                            rtol=1e-5, atol=1e-6)
 print("OK fisher")
 
+# --- ring-native topo fisher: two ppermutes, no gather, oracle parity ----
+from repro.core.gossip import ring_topo_fisher_gossip, ring_rows_gossip, \
+    topo_fisher_gossip
+from repro.core.merge_impl import topo_weighted_merge
+from repro.core.topology import ring_structured
+from repro.launch import hlo_stats
+rW = dynamic_matrix(ring_matrix(4, 0.5), [True, True, False, True])
+assert ring_structured(rW)
+ring_fn = jax.jit(lambda t, ff: ring_topo_fisher_gossip(t, ff, rW, mesh,
+                                                        "node"))
+want = topo_weighted_merge(x, f, rW)["w"]
+np.testing.assert_allclose(np.asarray(ring_fn(x, f)["w"]), np.asarray(want),
+                           rtol=1e-5, atol=1e-6)
+coll = hlo_stats.collective_bytes(ring_fn.lower(x, f).compile().as_text())
+d = x["w"][0].size
+assert coll["all-gather"] == 0, coll
+# two ppermutes of the fused (F*theta + F) payload: 4*P f32 values
+assert coll["collective-permute"] == 4 * d * 4, (coll, d)
+np.testing.assert_allclose(
+    np.asarray(jax.jit(lambda t, ff: ring_topo_fisher_gossip(
+        t, ff, rW, mesh, "node", wire_dtype="bf16"))(x, f)["w"]),
+    np.asarray(want), rtol=2e-2, atol=2e-2)
+print("OK ring_topo_fisher")
+
+# --- single-gather fallback: exactly ONE all_gather of (num + mass) ------
+gat_fn = jax.jit(lambda t, ff: topo_fisher_gossip(t, ff, rW, mesh, "node"))
+np.testing.assert_allclose(np.asarray(gat_fn(x, f)["w"]), np.asarray(want),
+                           rtol=1e-5, atol=1e-6)
+coll = hlo_stats.collective_bytes(gat_fn.lower(x, f).compile().as_text())
+assert coll["collective-permute"] == 0, coll
+# one gather of the stacked [2N, P] payload -> 2*N*P f32 result bytes;
+# two separate gathers would land 2x this from 2 ops
+assert coll["all-gather"] == 2 * 4 * d * 4, (coll, d)
+assert coll["count"] == 1, coll
+print("OK topo_single_gather")
+
+# --- ring rows gossip (mean/fedavg ring with a masked matrix) ------------
+got = jax.jit(lambda t: ring_rows_gossip(t, rW, mesh, "node"))(x)["w"]
+want_rows = np.tensordot(rW, np.asarray(x["w"]), axes=(1, 0))
+np.testing.assert_allclose(np.asarray(got), want_rows, rtol=1e-5, atol=1e-6)
+print("OK ring_rows")
+
+
 # --- gradmatch via the engine gossip backend == host gradmatch merge -----
 from repro.core.engine import SwarmEngine
 from repro.core.merge_impl import gradmatch_merge
@@ -91,6 +134,20 @@ np.testing.assert_allclose(np.asarray(cand["w"]),
                            np.asarray(gradmatch_merge(x, f, w)["w"]),
                            rtol=1e-5, atol=1e-6)
 print("OK gradmatch_gossip")
+
+# --- engine gossip backend lowers ring fisher to the ppermute schedule ---
+rcfg = SwarmConfig(n_nodes=4, topology="ring", merge="fisher",
+                   lora_only=False)
+reng = SwarmEngine(rcfg, None, None, data_sizes=[1.0] * 4, backend="gossip",
+                   mesh=gm_mesh, axis="gnode")
+assert reng.sync_schedule.name == "ring_topo_ppermute"
+rcand_fn = jax.jit(lambda p, ff: reng.propose(p, fishers=ff)[0])
+# engine applies finalize_mass (mean-1 normalization) before the merge;
+# scale cancels in the ratio, so the unnormalized oracle still matches
+want_eng = topo_weighted_merge(x, f, ring_matrix(4, 0.5))["w"]
+np.testing.assert_allclose(np.asarray(rcand_fn(x, f)["w"]),
+                           np.asarray(want_eng), rtol=1e-4, atol=1e-5)
+print("OK engine_ring_schedule")
 
 # --- full SPMD swarm step: vmapped train + gossip + gated commit --------
 cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
@@ -130,6 +187,39 @@ l0 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a[0]-b[0]).max()),
                                   final, cand))
 assert max(l0) == 0.0
 print("OK swarm_step")
+
+# --- full-topology fedavg keeps the psum schedule under a runtime mask ---
+fcfg = SwarmConfig(n_nodes=4, topology="full", merge="fedavg",
+                   lora_only=False)
+feng = SwarmEngine(fcfg, None, None, data_sizes=[1, 3, 3, 3],
+                   backend="gossip", mesh=gm_mesh, axis="gnode")
+assert feng.sync_schedule.name == "fedavg_psum"
+xa = {"w": jnp.asarray(np.random.default_rng(9).normal(0, 1, (4, 7)),
+                       jnp.float32)}
+amask = jnp.asarray([True, True, False, True])
+fcand = jax.jit(lambda p, a: feng.propose(p, active=a)[0])(xa, amask)
+Wdyn = dynamic_matrix(full_matrix(4, [1, 3, 3, 3]),
+                      np.asarray(amask))
+np.testing.assert_allclose(np.asarray(fcand["w"]),
+                           Wdyn @ np.asarray(xa["w"]), rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(np.asarray(fcand["w"][2]), np.asarray(xa["w"][2]))
+coll = hlo_stats.collective_bytes(
+    jax.jit(lambda p, a: feng.propose(p, active=a)[0])
+    .lower(xa, amask).compile().as_text())
+# masked fedavg stays on the psum wire: no payload-sized all_gather (XLA
+# may still gather the tiny [N] weights vector)
+assert coll["all-gather"] < 4 * 7 * 4, coll
+# merge="mean" must stay UNIFORM under the mask (host W is uniform),
+# ignoring data sizes
+mcfg = SwarmConfig(n_nodes=4, topology="full", merge="mean",
+                   lora_only=False)
+meng = SwarmEngine(mcfg, None, None, data_sizes=[1, 3, 3, 3],
+                   backend="gossip", mesh=gm_mesh, axis="gnode")
+mcand = jax.jit(lambda p, a: meng.propose(p, active=a)[0])(xa, amask)
+Wuni = dynamic_matrix(full_matrix(4), np.asarray(amask))
+np.testing.assert_allclose(np.asarray(mcand["w"]),
+                           Wuni @ np.asarray(xa["w"]), rtol=1e-5, atol=1e-6)
+print("OK full_psum_masked")
 
 # --- dynamic membership with a TRACED active mask under jit --------------
 dcfg = SwarmConfig(n_nodes=4, topology="dynamic", merge="fedavg",
@@ -179,6 +269,30 @@ def test_gradmatch_engine_gossip_matches_host_merge(spmd_out):
     assert "OK gradmatch_gossip" in spmd_out
 
 
+def test_ring_topo_fisher_ppermute_parity_and_bytes(spmd_out):
+    """Ring-native topo-fisher gossip == the host oracle, lowered to two
+    ppermutes of the fused (F⊙θ ⊕ F) payload (4·P values) with ZERO
+    all_gathers; bf16 wire casting stays within cast tolerance."""
+    assert "OK ring_topo_fisher" in spmd_out
+
+
+def test_topo_fisher_single_gather(spmd_out):
+    """The general-rows fallback issues exactly ONE all_gather (the stacked
+    (num ⊕ mass) payload) instead of the former two matrix_gossip passes."""
+    assert "OK topo_single_gather" in spmd_out
+
+
+def test_ring_rows_gossip_matches_masked_matrix(spmd_out):
+    """ppermute row mixing honours a membership-masked ring matrix."""
+    assert "OK ring_rows" in spmd_out
+
+
+def test_engine_gossip_ring_fisher_uses_ppermute_schedule(spmd_out):
+    """The comms cost model routes ring+fisher through ring_topo_ppermute
+    end-to-end in the engine's gossip backend."""
+    assert "OK engine_ring_schedule" in spmd_out
+
+
 def test_swarm_spmd_train_and_sync_step(spmd_out):
     """Full SPMD swarm step: vmapped local training + gossip + gated commit."""
     assert "OK swarm_step" in spmd_out
@@ -187,6 +301,13 @@ def test_swarm_spmd_train_and_sync_step(spmd_out):
 def test_dynamic_membership_traced_active_mask(spmd_out):
     """Gossip propose works under jit with a traced (runtime) active mask."""
     assert "OK dynamic_traced" in spmd_out
+
+
+def test_full_fedavg_mask_stays_on_psum_schedule(spmd_out):
+    """A runtime membership mask must not silently demote full-topology
+    fedavg from the psum schedule (2·P·(N−1)/N) to an N·P all_gather: the
+    weights are active-masked in-graph and absent nodes keep their params."""
+    assert "OK full_psum_masked" in spmd_out
 
 
 def test_production_mesh_requires_devices(spmd_out):

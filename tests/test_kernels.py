@@ -96,6 +96,105 @@ def test_fused_merge_all_rows_match_per_node_oracle(seed):
                                    rtol=2e-5, atol=2e-5)
 
 
+def test_auto_block_respects_vmem_budget_at_n64():
+    """Regression (ISSUE 4 satellite): block sizing must account for N and
+    the extra importance stream — the old fixed 16k block wanted
+    (2·64+1)·16384·4 ≈ 8.5 MB of VMEM for a 64-node fisher commit."""
+    from repro.kernels.fused_merge import (DEFAULT_BLOCK, VMEM_BUDGET,
+                                           auto_block)
+    for n, streams in [(4, 1), (4, 2), (64, 1), (64, 2), (256, 2)]:
+        b = auto_block(n, streams)
+        assert b % 128 == 0 and b >= 128
+        assert (streams * n + 1) * b * 4 <= VMEM_BUDGET or b == 128
+    assert auto_block(4, 1) == DEFAULT_BLOCK          # small swarms keep 16k
+    assert (2 * 64 + 1) * auto_block(64, 2) * 4 <= VMEM_BUDGET
+
+
+def test_fused_merge_all_n64_weighted_matches_oracle():
+    """The importance-weighted commit at N=64 (auto-shrunk block) is still
+    exact vs the unfused ratio."""
+    from repro.kernels.fused_merge import fused_merge_all
+    rng = np.random.default_rng(7)
+    n, d = 64, 3000
+    x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    f = jnp.asarray(np.abs(rng.normal(1, 0.4, (n, d))), jnp.float32)
+    W = jnp.asarray(rng.dirichlet(np.ones(n), size=n), jnp.float32)
+    gates = jnp.asarray(rng.random(n) > 0.3)
+    out = fused_merge_all(x, W, gates, f, interpret=True)
+    num = np.asarray(W) @ (np.asarray(f) * np.asarray(x))
+    den = np.asarray(W) @ np.asarray(f)
+    want = np.where(np.asarray(gates)[:, None], num / den, np.asarray(x))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("wire_dtype", ["int8", "bf16", "f32"])
+@pytest.mark.parametrize("use_imp", [False, True])
+def test_fused_quant_merge_matches_xla_oracle(wire_dtype, use_imp):
+    """Quantize→merge→dequantize kernel == the `core.comms` XLA ground
+    truth: same EF reference advance, same merged rows, exact local params
+    on rejected rows."""
+    from repro.core import comms
+    from repro.kernels.fused_merge import fused_quant_merge_all
+    rng = np.random.default_rng(11)
+    n, d, wb = 4, 1500, 128
+    x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    ref = jnp.asarray(rng.normal(0, 0.5, (n, d)), jnp.float32)
+    W = jnp.asarray(rng.dirichlet(np.ones(n), size=n), jnp.float32)
+    gates = jnp.asarray([1, 0, 1, 1])
+    imp = (jnp.asarray(np.abs(rng.normal(1, 0.4, (n, d))), jnp.float32)
+           if use_imp else None)
+    got, new_ref = fused_quant_merge_all(x, ref, W, gates, imp,
+                                         wire_dtype=wire_dtype,
+                                         wire_block=wb, interpret=True)
+    eff = np.asarray(comms.wire_effective({"x": x}, {"x": ref},
+                                          wire_dtype, wb)["x"])
+    np.testing.assert_allclose(np.asarray(new_ref), eff, rtol=1e-6, atol=1e-6)
+    if use_imp:
+        merged = (np.asarray(W) @ (np.asarray(imp) * eff)
+                  / np.maximum(np.asarray(W) @ np.asarray(imp), 1e-30))
+    else:
+        merged = np.asarray(W) @ eff
+    g = np.asarray(gates).astype(bool)[:, None]
+    want = np.where(g, merged, np.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+    # rejected rows keep EXACT f32 locals — no wire round-trip on the keep
+    np.testing.assert_array_equal(np.asarray(got)[1], np.asarray(x)[1])
+
+
+def test_fused_quant_merge_tree_structural_tuples():
+    """A params tree whose structure contains tuples must not be confused
+    with the per-leaf (committed, reference) pairs."""
+    from repro.core import comms
+    from repro.kernels.fused_merge import fused_quant_merge_tree
+    tree = {"layers": (jnp.full((4, 8), 1.0), jnp.full((4, 8), 2.0))}
+    wire = comms.init_wire(tree)
+    W = jnp.full((4, 4), 0.25, jnp.float32)
+    committed, new_wire = fused_quant_merge_tree(
+        tree, wire, W, jnp.ones(4, jnp.int32), wire_dtype="int8",
+        wire_block=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(committed["layers"][0]), 1.0,
+                               rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(committed["layers"][1]), 2.0,
+                               rtol=1e-2)
+    assert new_wire["layers"][1].shape == (4, 8)
+
+
+def test_fused_quant_merge_tree_none_leaves():
+    from repro.core import comms
+    from repro.kernels.fused_merge import fused_quant_merge_tree
+    rng = np.random.default_rng(12)
+    tree = {"a": jnp.asarray(rng.normal(0, 1, (4, 6, 9)), jnp.float32),
+            "skip": None}
+    wire = comms.init_wire(tree)
+    W = jnp.full((4, 4), 0.25, jnp.float32)
+    committed, new_wire = fused_quant_merge_tree(
+        tree, wire, W, jnp.ones(4, jnp.int32), wire_dtype="int8",
+        wire_block=128, interpret=True)
+    assert committed["skip"] is None and new_wire["skip"] is None
+    assert committed["a"].shape == (4, 6, 9)
+    assert new_wire["a"].shape == (4, 6, 9)
+
+
 # property: merge with identity row == self row regardless of gate
 @pytest.mark.parametrize("seed", range(5))
 def test_fused_merge_identity_property(seed):
