@@ -29,10 +29,16 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
                     single-gather fallback on a forced CPU mesh
                     (subprocess): committed-params diff vs the host oracle
                     + HLO-measured collective bytes (~4·P vs 2·N·P)
+  mesh_wire         int8 EF wire on the mesh gossip path: q8 schedules vs
+                    their f32 forms on a forced CPU mesh (subprocess) —
+                    settled-parity diff, wall time, HLO-measured collective
+                    bytes (the ~4x shrink)
 
 ``--smoke`` runs a seconds-scale subset (tiny shapes, no cached experiment
 protocol) so CI can exercise every benchmark entry point; a tier-1 test
-invokes it, keeping this harness from rotting.
+invokes it, keeping this harness from rotting. Smoke JSON sections land in
+the gitignored ``.bench/`` scratch copy, never in the committed
+BENCH_swarm_sync.json (CI asserts the tree stays clean).
 
 Full protocol runs live in examples/histopathology_swarm.py; these benchmarks
 use a reduced-but-faithful configuration (and reuse cached full results from
@@ -49,13 +55,20 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULT_DIR = "experiments/histo"
-BENCH_SYNC_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                               "..", "BENCH_swarm_sync.json")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+BENCH_SYNC_JSON = os.path.join(_ROOT, "BENCH_swarm_sync.json")
+# --smoke sections land in a gitignored scratch file: tier-1 / CI runs must
+# never read-modify-write the committed perf-trajectory artifact (machine-
+# local timings would dirty the tree on every test run)
+BENCH_SCRATCH_JSON = os.path.join(_ROOT, ".bench", "BENCH_swarm_sync.json")
 
 
-def _bench_json_update(section: str, data) -> str:
-    """Merge one section into the machine-readable BENCH_swarm_sync.json."""
-    path = os.path.abspath(BENCH_SYNC_JSON)
+def _bench_json_update(section: str, data, smoke: bool = False) -> str:
+    """Merge one section into the machine-readable BENCH_swarm_sync.json
+    (the committed file for explicit full runs, the ``.bench/`` scratch
+    copy for --smoke)."""
+    path = os.path.abspath(BENCH_SCRATCH_JSON if smoke else BENCH_SYNC_JSON)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
     doc = {}
     if os.path.exists(path):
         try:
@@ -512,10 +525,10 @@ def swarm_sync(smoke: bool = False):
             wall_us_per_round=us, simulated=s.simulated))
         print(f"swarm_sync_{topo}_{merge}_{wd},{us:.1f},"
               f"sched={s.name};bytes={sess.predicted_sync_bytes:.0f}")
-    # smoke writes its own section so CI runs never clobber the committed
-    # full-grid rows (the perf-trajectory artifact)
+    # smoke writes its own section INTO THE SCRATCH FILE so CI runs never
+    # touch the committed full-grid rows (the perf-trajectory artifact)
     path = _bench_json_update("schedules_smoke" if smoke else "schedules",
-                              rows)
+                              rows, smoke=smoke)
     print(f"swarm_sync_json,0,{path}")
 
 
@@ -585,11 +598,96 @@ def ring_sync_parity(smoke: bool = False):
     print(out.stdout, end="")
     rows = [dict(zip(("name", "us", "derived"), line.split(",", 2)))
             for line in out.stdout.strip().splitlines() if "," in line]
-    _bench_json_update("ring_parity_smoke" if smoke else "ring_parity", rows)
+    _bench_json_update("ring_parity_smoke" if smoke else "ring_parity", rows,
+                       smoke=smoke)
 
 
 def ring_sync_parity_smoke():
     ring_sync_parity(smoke=True)
+
+
+def _mesh_wire_inner(n: int, d: int, reps: int):
+    """Runs inside the forced-device-count subprocess: the int8 mesh EF wire
+    (q8 ring + q8 psum schedules) vs their f32 forms — committed-params
+    parity after EF settling, wall time, and HLO-measured collective bytes
+    (the ~4x wire shrink the cost model promises)."""
+    from repro.core import gossip
+    from repro.core.merge_impl import topo_weighted_merge
+    from repro.core.topology import build_matrix
+    from repro.launch import hlo_stats
+
+    assert jax.device_count() >= n, "inner bench needs the forced device count"
+    mesh = jax.make_mesh((n,), ("node",), devices=jax.devices()[:n])
+    rng = np.random.default_rng(0)
+    wb = 128
+    x = {"w": jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)}
+    f = {"w": jnp.asarray(np.abs(rng.normal(1, 0.4, (n, d))), jnp.float32)}
+    W = build_matrix("ring", n)
+    want = np.asarray(topo_weighted_merge(x, f, W)["w"])
+
+    wire0 = gossip.init_mesh_wire("ring_topo_ppermute", x, n_shards=n,
+                                  wire_block=wb)
+    q8 = jax.jit(lambda t, ff, w: gossip.ring_topo_fisher_gossip_q8(
+        t, ff, W, w, mesh, "node", wire_block=wb))
+    f32 = jax.jit(lambda t, ff: gossip.ring_topo_fisher_gossip(
+        t, ff, W, mesh, "node"))
+    wire = wire0
+    for _ in range(6):   # settle the EF references
+        merged, wire = q8(x, f, wire)
+    err = float(np.abs(np.asarray(merged["w"]) - want).max())
+    us_q8 = _time_us(lambda: q8(x, f, wire0)[0]["w"], reps=reps)
+    us_f32 = _time_us(lambda: f32(x, f)["w"], reps=reps)
+    cq = hlo_stats.collective_bytes(
+        q8.lower(x, f, wire0).compile().as_text())
+    cf = hlo_stats.collective_bytes(f32.lower(x, f).compile().as_text())
+    print(f"mesh_wire_q8_round_us,{us_q8:.1f},n={n};d={d};wb={wb}")
+    print(f"mesh_wire_f32_round_us,{us_f32:.1f},n={n};d={d}")
+    print(f"mesh_wire_q8_settled_max_diff,0,{err:.2e}")
+    print(f"mesh_wire_q8_coll_bytes,0,{cq['total']}")
+    print(f"mesh_wire_f32_coll_bytes,0,{cf['total']}")
+    print(f"mesh_wire_bytes_ratio,0,{cq['total'] / cf['total']:.3f}")
+    # the compression-aware psum: int8 reduce-scatter chunks vs f32 psum
+    wv = jnp.full((n,), 1.0 / n, jnp.float32)
+    pw0 = gossip.init_mesh_wire("fedavg_psum_q8", x, n_shards=n,
+                                wire_block=wb)
+    pq = jax.jit(lambda t, w: gossip.fedavg_psum_q8(t, wv, w, mesh, "node",
+                                                    wire_block=wb))
+    pf = jax.jit(lambda t: gossip.fedavg_gossip(t, wv, mesh, "node"))
+    cq2 = hlo_stats.collective_bytes(pq.lower(x, pw0).compile().as_text())
+    cf2 = hlo_stats.collective_bytes(pf.lower(x).compile().as_text())
+    print(f"mesh_wire_psum_q8_coll_bytes,0,{cq2['total']}")
+    print(f"mesh_wire_psum_f32_coll_bytes,0,{cf2['total']}")
+
+
+def mesh_wire(smoke: bool = False):
+    """int8 EF wire on the mesh gossip path (ISSUE 5): forced-CPU-mesh
+    subprocess measuring the q8 schedules' parity + collective bytes; rows
+    land in BENCH_swarm_sync.json (committed on full runs, scratch on
+    --smoke)."""
+    import subprocess
+    import sys
+    n, d, reps = (4, 1 << 12, 3) if smoke else (4, 1 << 16, 10)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}").strip()
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--inner-mesh-wire", f"{n},{d},{reps}"],
+        capture_output=True, text=True, env=env, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh wire subprocess failed: "
+                           f"{out.stderr[-800:]}")
+    print(out.stdout, end="")
+    rows = [dict(zip(("name", "us", "derived"), line.split(",", 2)))
+            for line in out.stdout.strip().splitlines() if "," in line]
+    _bench_json_update("mesh_wire_smoke" if smoke else "mesh_wire", rows,
+                       smoke=smoke)
+
+
+def mesh_wire_smoke():
+    mesh_wire(smoke=True)
 
 
 def merge_kernel_smoke():
@@ -603,12 +701,14 @@ def overlap_roundtrip_smoke():
 ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
        sync_roundtrip, engine_roundtrip, overlap_roundtrip,
-       dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity]
+       dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity,
+       mesh_wire]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
          engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
-         spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke]
+         spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke,
+         mesh_wire_smoke]
 
 
 def roofline_table():
@@ -634,6 +734,9 @@ def main(argv=None) -> None:
     ap.add_argument("--inner-ring-sync", default="",
                     help="internal: n,d,reps (run inside the forced-device"
                          " subprocess)")
+    ap.add_argument("--inner-mesh-wire", default="",
+                    help="internal: n,d,reps (run inside the forced-device"
+                         " subprocess)")
     args = ap.parse_args(argv)
 
     if args.inner_spmd_parity:
@@ -644,6 +747,11 @@ def main(argv=None) -> None:
     if args.inner_ring_sync:
         n, d, reps = map(int, args.inner_ring_sync.split(","))
         _ring_sync_parity_inner(n, d, reps)
+        return
+
+    if args.inner_mesh_wire:
+        n, d, reps = map(int, args.inner_mesh_wire.split(","))
+        _mesh_wire_inner(n, d, reps)
         return
 
     print("name,us_per_call,derived")

@@ -16,3 +16,12 @@ _flags = os.environ.get("XLA_FLAGS", "")
 if "--xla_backend_optimization_level" not in _flags:
     os.environ["XLA_FLAGS"] = (
         _flags + " --xla_backend_optimization_level=0").strip()
+
+
+def pytest_configure(config):
+    # forced-CPU-mesh subprocess tests: CI shards them into a parallel job
+    # (`-m spmd` / `-m "not spmd"`); plain `pytest -x -q` runs everything.
+    config.addinivalue_line(
+        "markers",
+        "spmd: forced-CPU-mesh subprocess tests (shardable into a parallel "
+        "CI job)")

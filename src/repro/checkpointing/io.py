@@ -72,7 +72,19 @@ def load_pytree(path: str, like: Any) -> Any:
         if list(np.asarray(leaf).shape) != entry["shape"]:
             raise ValueError(f"shape mismatch at {key}: "
                              f"{np.asarray(leaf).shape} vs {entry['shape']}")
-        return jnp.asarray(arr)
+        out = jnp.asarray(arr)
+        # restore onto the template's placement: a mesh-sharded template
+        # (gossip-backend params / EF wire state) gets its shards back
+        # instead of a replicated copy on the default device. Single-device
+        # templates stay UNCOMMITTED so jit remains free to reshard them
+        # onto whatever mesh the restored session computes on.
+        if (isinstance(leaf, jax.Array)
+                and isinstance(leaf.sharding, jax.sharding.NamedSharding)):
+            try:
+                out = jax.device_put(out, leaf.sharding)
+            except (ValueError, RuntimeError):  # template mesh unavailable
+                pass
+        return out
 
     return jax.tree_util.tree_map_with_path(restore, like)
 

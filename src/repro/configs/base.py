@@ -160,7 +160,9 @@ class SwarmConfig:
     #   "f32"  — uncompressed (default; bit-identical to the pre-comms paths)
     #   "bf16" — payloads cast to bf16 on the wire, f32 accumulation
     #   "int8" — error-feedback quantized deltas with per-block scales; the
-    #            residual rides in SwarmState.wire (engine backend)
+    #            EF state rides in SwarmState.wire on BOTH compiled backends:
+    #            the θ̂ reference on "engine", the sharded per-shard residual
+    #            pytree of the picked *_q8 collective schedule on "gossip"
     wire_dtype: str = "f32"
     wire_block: int = 512         # elements per int8 scale block (mult. of 128)
     seed: int = 0

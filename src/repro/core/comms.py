@@ -24,21 +24,26 @@ place those decisions live; every backend routes through it:
     fused_quant_merge_all`) re-derives the same values in one VMEM pass.
 
 Schedule table (values moved per device per sync, P = payload params/node,
-N = swarm size; wire dtype scales the point-to-point entries):
+N = swarm size; wire dtype scales the point-to-point entries, and int8 adds
+4/wire_block bytes per value of scale overhead):
 
   topology   merge            schedule              values/sync   collective
   full       mean/fedavg      fedavg_psum           2P·(N−1)/N    psum
+  full       mean/fedavg      fedavg_psum_q8        2P            reduce_scatter
   ring       mean/fedavg      ring_ppermute         2P            ppermute
   dynamic    mean/fedavg      gathered_rows         N·P           all_gather
   full       fisher/gradmatch fisher_psum           4P·(N−1)/N    psum
+  full       fisher/gradmatch fisher_psum_q8        4P            reduce_scatter
   ring       fisher/gradmatch ring_topo_ppermute    4P            ppermute
   dynamic    fisher/gradmatch gathered_topo_stack   2N·P          all_gather
 
 Ring schedules need one node per mesh shard (``per == 1``) and N ≥ 3 (an
 N = 2 ring folds both neighbour edges onto one peer); otherwise the gathered
-forms are the fallback. psum schedules allreduce in f32 (wire compression
-does not commute with the reduction), so int8/bf16 wire can flip the argmin
-toward a gathered/ppermute schedule — that is the point of the model.
+forms are the fallback. The plain psum schedules allreduce in f32 (wire
+compression does not commute with the sum); an int8 wire adds the ``*_q8``
+compression-aware reductions (`core.gossip`: quantized-chunk reduce-scatter
++ local dequant + quantized all_gather) whose payloads ride the wire at one
+byte per value — the picker follows the bytes, not the table.
 
 Error-feedback contract: v_t = θ_t − θ̂_{t−1} is quantized per block of
 ``wire_block`` elements (scale = max|v|/127, round-half-even — fully
@@ -113,17 +118,23 @@ class SyncSchedule:
                 f"{self.bytes_per_sync(p) / 1e6:.3f} MB/sync at P={p}")
 
 
-def candidate_schedules(cfg, *, per: int = 1) -> List[SyncSchedule]:
+def candidate_schedules(cfg, *, per: int = 1,
+                        model_sharded: bool = False) -> List[SyncSchedule]:
     """Every schedule that is CORRECT for this config's sync semantics.
 
     ``per`` = stacked nodes per mesh shard (N // mesh axis size); ppermute
     schedules map one node to one shard, so they need ``per == 1``.
+    ``model_sharded`` = payload leaves carry non-trivial inner (model-axis)
+    PartitionSpecs; the q8 psum reductions chunk the globally-flattened
+    payload and don't support that layout, so they drop out of the
+    candidate set (the ring/gathered q8 forms handle inner specs).
     """
     n = cfg.n_nodes
     wd = validate_wire_dtype(getattr(cfg, "wire_dtype", "f32"))
     wb = validate_wire_block(getattr(cfg, "wire_block", 512))
     weighted = cfg.merge in ("fisher", "gradmatch")
     ring_ok = cfg.topology == "ring" and per == 1 and n >= 3
+    psum_q8_ok = wd == "int8" and not model_sharded
     mk = lambda name, coll, factor, wdt: SyncSchedule(
         name, coll, factor, wire_dtype=wdt, wire_block=wb)
 
@@ -132,25 +143,45 @@ def candidate_schedules(cfg, *, per: int = 1) -> List[SyncSchedule]:
         if cfg.topology == "full":
             # psums reduce in f32: compression doesn't commute with the sum
             out.append(mk("fisher_psum", "psum", 4.0 * (n - 1) / n, "f32"))
+            if psum_q8_ok:
+                # compression-aware reduction: int8 reduce-scatter chunks
+                # (all_to_all, P values/stream) + int8 all_gather of the
+                # reduced chunks (P values/stream), two (num ⊕ mass) streams
+                out.append(mk("fisher_psum_q8", "reduce_scatter", 4.0, wd))
         out.append(mk("gathered_topo_stack", "all_gather", 2.0 * n, wd))
         if ring_ok:
             out.append(mk("ring_topo_ppermute", "ppermute", 4.0, wd))
     else:
         if cfg.topology == "full":
             out.append(mk("fedavg_psum", "psum", 2.0 * (n - 1) / n, "f32"))
+            if psum_q8_ok:
+                out.append(mk("fedavg_psum_q8", "reduce_scatter", 2.0, wd))
         out.append(mk("gathered_rows", "all_gather", 1.0 * n, wd))
         if ring_ok:
             out.append(mk("ring_ppermute", "ppermute", 2.0, wd))
     return out
 
 
+def has_inner_sharding(param_specs) -> bool:
+    """True when a param-specs pytree names any non-trivial inner (model)
+    axis — the layout the q8 psum reductions can't chunk."""
+    if param_specs is None:
+        return False
+    from jax.sharding import PartitionSpec as PSpec
+    leaves = jax.tree.leaves(param_specs,
+                             is_leaf=lambda x: isinstance(x, PSpec))
+    return any(any(d is not None for d in tuple(s))
+               for s in leaves if isinstance(s, PSpec))
+
+
 def pick_schedule(cfg, *, per: int = 1, payload_params: Optional[int] = None,
-                  simulated: bool = False) -> SyncSchedule:
+                  simulated: bool = False,
+                  model_sharded: bool = False) -> SyncSchedule:
     """Cheapest correct schedule under the cost model (trace-time static:
     everything it consumes — topology, merge, wire dtype, N, shard layout —
     is config/mesh data, so the choice never retraces a compiled round)."""
     p = _NOMINAL_P if payload_params is None else payload_params
-    cands = candidate_schedules(cfg, per=per)
+    cands = candidate_schedules(cfg, per=per, model_sharded=model_sharded)
     best = min(cands, key=lambda s: s.bytes_per_sync(p))
     if simulated:
         best = dataclasses.replace(best, simulated=True)
@@ -168,16 +199,72 @@ def payload_param_count(stacked, lora_only: bool, n_nodes: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# shared quantization core: THE per-block int8/bf16 round-trip implementation
+# ---------------------------------------------------------------------------
+# Every path that quantizes — the stateless XLA wire (`_leaf_quant_dequant`),
+# the fused Pallas commit kernel (`kernels.fused_merge`), and the mesh gossip
+# q8 schedules (`core.gossip`) — goes through these three functions, so the
+# EF contract (scale = max|block|/127, round-half-even, clip ±127) has exactly
+# one home and can never silently diverge between the gate candidate and the
+# committed params.
+
+def _block_quantize(v):
+    """[..., n_blocks, wire_block] f32 → (q f32 int-valued, scale f32).
+
+    scale = max|block|/127 (zero blocks keep scale 0 and quantize to 0);
+    q = clip(round(v / scale), ±127) — deterministic round-half-even."""
+    scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(v / jnp.where(scale > 0, scale, 1.0)),
+                 -127.0, 127.0)
+    return q, scale
+
+
+def quant_dequant_block(v, wire_dtype: str, wire_block: int):
+    """The single int8/bf16 round-trip over a [..., B] array (B a multiple of
+    ``wire_block``; f32 out). Safe inside a Pallas kernel body (pure jnp on
+    the tile) and equal bit-for-bit to ``quant_decode(*quant_encode(v))``."""
+    vf = jnp.asarray(v, jnp.float32)
+    if wire_dtype == "f32":
+        return vf
+    if wire_dtype == "bf16":
+        return vf.astype(jnp.bfloat16).astype(jnp.float32)
+    shape = vf.shape
+    blocks = vf.reshape(shape[:-1] + (shape[-1] // wire_block, wire_block))
+    q, scale = _block_quantize(blocks)
+    return (q * scale).reshape(shape)
+
+
+def quant_encode(v, wire_block: int):
+    """[..., B] f32 (B a multiple of ``wire_block``) → the int8 wire payload
+    ``(q int8 [..., B], scales f32 [..., B // wire_block])`` — what actually
+    crosses a mesh collective on the q8 schedules."""
+    vf = jnp.asarray(v, jnp.float32)
+    shape = vf.shape
+    blocks = vf.reshape(shape[:-1] + (shape[-1] // wire_block, wire_block))
+    q, scale = _block_quantize(blocks)
+    return q.astype(jnp.int8).reshape(shape), scale[..., 0]
+
+
+def quant_decode(q, scales, wire_block: int):
+    """Inverse of :func:`quant_encode`: (int8 payload, per-block scales) →
+    the dequantized f32 values (== the sender's round-trip, bit-exact)."""
+    qf = q.astype(jnp.float32)
+    shape = qf.shape
+    blocks = qf.reshape(shape[:-1] + (shape[-1] // wire_block, wire_block))
+    return (blocks * scales[..., None]).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
 # quantized wire: stateless per-block quant→dequant + error-feedback advance
 # ---------------------------------------------------------------------------
 
 def _leaf_quant_dequant(x, wire_dtype: str, wire_block: int):
     """Per-leaf quantize→dequantize of a stacked [N, ...] leaf (f32 out).
 
-    int8: per-(node, block-of-``wire_block``-elements) max-abs scales,
-    deterministic round-half-even — the exact arithmetic the fused Pallas
-    commit kernel re-derives in its VMEM pass (same block grid from 0).
-    """
+    Pads the flattened per-node payload to the ``wire_block`` grid and runs
+    the shared :func:`quant_dequant_block` core — the exact arithmetic the
+    fused Pallas commit kernel applies in its VMEM pass (same block grid
+    from 0)."""
     xf = jnp.asarray(x, jnp.float32)
     if wire_dtype == "f32":
         return xf
@@ -189,12 +276,8 @@ def _leaf_quant_dequant(x, wire_dtype: str, wire_block: int):
     pad = (-d) % wire_block
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    blocks = flat.reshape(n, -1, wire_block)
-    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
-    q = jnp.clip(jnp.round(blocks / jnp.where(scale > 0, scale, 1.0)),
-                 -127.0, 127.0)
-    deq = (q * scale).reshape(n, -1)[:, :d]
-    return deq.reshape(xf.shape)
+    deq = quant_dequant_block(flat, wire_dtype, wire_block)
+    return deq[:, :d].reshape(xf.shape)
 
 
 def quant_dequant_tree(tree, wire_dtype: str, wire_block: int = 512):

@@ -303,18 +303,18 @@ class SwarmEngine:
             getattr(cfg, "wire_dtype", "f32"))
         self.wire_block = comms.validate_wire_block(
             getattr(cfg, "wire_block", 512))
-        if backend == "gossip" and self.wire_dtype == "int8":
-            raise ValueError(
-                "int8 wire compression needs the engine backend's error-"
-                "feedback state (SwarmState.wire); the mesh gossip path "
-                "supports wire_dtype f32/bf16")
         # the comms cost model picks the sync schedule at trace time: for
         # the gossip backend this decides which collectives propose lowers
-        # to; for host it reports the SPMD-equivalent wire cost (simulated)
+        # to; for host it reports the SPMD-equivalent wire cost (simulated).
+        # model-sharded payloads (inner param specs) drop the q8 psum
+        # reductions from the candidate set — they chunk the globally-
+        # flattened payload, which a model axis would scramble.
         per = 1 if backend != "gossip" else max(
             1, cfg.n_nodes // mesh.shape[axis])
         self.sync_schedule = comms.pick_schedule(
-            cfg, per=per, simulated=(backend != "gossip"))
+            cfg, per=per, simulated=(backend != "gossip"),
+            model_sharded=(backend == "gossip"
+                           and comms.has_inner_sharding(param_specs)))
         self._vstep = (None if train_step_fn is None
                        else jax.vmap(train_step_fn, in_axes=(0, 0, 0, None)))
         self._veval = None if eval_fn is None else jax.vmap(eval_fn)
@@ -371,7 +371,7 @@ class SwarmEngine:
         if fishers is None and stats is not None:
             fishers = stats
         if self.backend == "gossip":
-            return self._propose_gossip(stacked, active, fishers), None, None
+            return self._propose_gossip(stacked, active, fishers)[0], None, None
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
              else jnp.asarray(active).astype(bool))
@@ -399,22 +399,32 @@ class SwarmEngine:
                                          weights=weights,
                                          self_weight=self.cfg.self_weight)
 
-    def _propose_gossip(self, stacked, active, fishers):
+    def _propose_gossip(self, stacked, active, fishers, wire=None):
         """Merge on the mesh, lowered to the collective schedule the comms
         cost model picked at construction (`self.sync_schedule`):
 
-          fedavg_psum / fisher_psum       — global weighted psum(s)
+          fedavg_psum / fisher_psum       — global weighted psum(s), f32
+          *_psum_q8                       — compression-aware reduction:
+                                            int8 reduce-scatter + all_gather
           ring_ppermute / ring_topo_...   — two point-to-point ppermutes
           gathered_rows / gathered_topo_… — one all_gather + row contraction
 
         Point-to-point schedules wire-cast their payloads per
-        ``cfg.wire_dtype`` (bf16 on the mesh; int8 EF is engine-backend)."""
+        ``cfg.wire_dtype``; with ``wire_dtype="int8"`` every schedule runs
+        its error-feedback q8 form against the sharded mesh wire state
+        (``wire``; auto-initialized to zero when not threaded).
+
+        Returns ``(merged, new_wire)`` — ``new_wire`` is None unless the
+        int8 mesh wire is active."""
         from repro.core import gossip
         from jax.sharding import PartitionSpec as P
 
         cfg, specs = self.cfg, self.param_specs
         sched = self.sync_schedule.name
-        wire = None if self.wire_dtype == "f32" else self.wire_dtype
+        q8 = self.wire_dtype == "int8"
+        wire_cast = None if self.wire_dtype == "f32" or q8 else self.wire_dtype
+        if q8 and wire is None:
+            wire = self._auto_wire(stacked, None)
         # merge="mean" averages uniformly (host W is uniform); only fedavg
         # folds dataset sizes into the psum weights
         sizes = (self.data_sizes if cfg.merge == "fedavg"
@@ -430,6 +440,8 @@ class SwarmEngine:
         else:
             payload, base = stacked, None
 
+        new_wire = None
+        qkw = dict(wire_block=self.wire_block)
         if cfg.merge in ("fisher", "gradmatch"):
             if fishers is None:
                 if not self.strategy.uses_stats:
@@ -440,38 +452,55 @@ class SwarmEngine:
                  else jnp.asarray(active).astype(bool))
             fishers = self.strategy.finalize_mass(fishers, a)
             w = active_weights_traced(self.data_sizes, a)
-            if sched == "fisher_psum":
+            if sched in ("fisher_psum", "fisher_psum_q8"):
                 # the strategy owns any weight-folding identity (gradmatch ≡
-                # w-weighted fisher ratio) — fisher_gossip's two psums do
-                # the rest
+                # w-weighted fisher ratio) — the two psums / the two EF
+                # delta-consensus streams do the rest
                 fishers = self.strategy.gossip_mass(fishers, w)
-                merged = gossip.fisher_gossip(payload, fishers, self.mesh,
-                                              self.axis, inner_specs=specs)
+                if sched == "fisher_psum_q8":
+                    merged, new_wire = gossip.fisher_psum_q8(
+                        payload, fishers, wire, self.mesh, self.axis,
+                        inner_specs=specs, eps=self.strategy.eps, **qkw)
+                else:
+                    merged = gossip.fisher_gossip(payload, fishers, self.mesh,
+                                                  self.axis, inner_specs=specs)
             else:
                 # topology-restricted weighted merge on the mesh: per-row
                 # ratio over graph-neighbour contributions only, matching
                 # the host backend's `topo_weighted_merge` oracle
                 rows = self.strategy.topo_rows(self._traced_W(a), w)
-                fn = (gossip.ring_topo_fisher_gossip
-                      if sched == "ring_topo_ppermute"
-                      else gossip.topo_fisher_gossip)
-                merged = fn(payload, fishers, rows, self.mesh, self.axis,
-                            inner_specs=specs, eps=self.strategy.eps,
-                            wire_dtype=wire)
-        elif sched == "fedavg_psum":
-            if active is None:
-                merged = gossip.fedavg_gossip(payload, weights, self.mesh,
-                                              self.axis, inner_specs=specs)
+                if q8:
+                    fn = (gossip.ring_topo_fisher_gossip_q8
+                          if sched == "ring_topo_ppermute"
+                          else gossip.topo_fisher_gossip_q8)
+                    merged, new_wire = fn(payload, fishers, rows, wire,
+                                          self.mesh, self.axis,
+                                          inner_specs=specs,
+                                          eps=self.strategy.eps, **qkw)
+                else:
+                    fn = (gossip.ring_topo_fisher_gossip
+                          if sched == "ring_topo_ppermute"
+                          else gossip.topo_fisher_gossip)
+                    merged = fn(payload, fishers, rows, self.mesh, self.axis,
+                                inner_specs=specs, eps=self.strategy.eps,
+                                wire_dtype=wire_cast)
+        elif sched in ("fedavg_psum", "fedavg_psum_q8"):
+            a = (None if active is None
+                 else jnp.asarray(active).astype(bool))
+            # runtime membership stays on the psum schedule: weights are
+            # active-masked + renormalized in-graph, and absent nodes keep
+            # their own params in the candidate (same semantics as the
+            # masked mixing rows, at psum instead of gather cost)
+            w_eff = (jnp.asarray(weights, jnp.float32) if a is None
+                     else active_weights_traced(sizes, a))
+            if sched == "fedavg_psum_q8":
+                merged, new_wire = gossip.fedavg_psum_q8(
+                    payload, w_eff, wire, self.mesh, self.axis,
+                    inner_specs=specs, **qkw)
             else:
-                # runtime membership stays on the psum schedule: weights are
-                # active-masked + renormalized in-graph, and absent nodes
-                # keep their own params in the candidate (same semantics as
-                # the masked mixing rows, at 2·P·(N−1)/N instead of N·P)
-                a = jnp.asarray(active).astype(bool)
-                w_active = active_weights_traced(sizes, a)
-                merged = gossip.fedavg_gossip(payload, w_active, self.mesh,
+                merged = gossip.fedavg_gossip(payload, w_eff, self.mesh,
                                               self.axis, inner_specs=specs)
-
+            if a is not None:
                 def keep_absent(m, x):
                     if m is None:
                         return None
@@ -486,15 +515,25 @@ class SwarmEngine:
                  else jnp.asarray(active).astype(bool))
             W = self._traced_W(a)
             if sched == "ring_ppermute":
-                merged = gossip.ring_rows_gossip(payload, W, self.mesh,
-                                                 self.axis, inner_specs=specs,
-                                                 wire_dtype=wire)
+                if q8:
+                    merged, new_wire = gossip.ring_rows_gossip_q8(
+                        payload, W, wire, self.mesh, self.axis,
+                        inner_specs=specs, **qkw)
+                else:
+                    merged = gossip.ring_rows_gossip(payload, W, self.mesh,
+                                                     self.axis,
+                                                     inner_specs=specs,
+                                                     wire_dtype=wire_cast)
+            elif q8:
+                merged, new_wire = gossip.matrix_gossip_q8(
+                    payload, W, wire, self.mesh, self.axis,
+                    inner_specs=specs, **qkw)
             else:
                 merged = gossip.matrix_gossip(payload, W, self.mesh,
                                               self.axis, inner_specs=specs,
-                                              wire_dtype=wire)
+                                              wire_dtype=wire_cast)
 
-        return combine(merged, base) if cfg.lora_only else merged
+        return (combine(merged, base) if cfg.lora_only else merged), new_wire
 
     # -- gated sync ----------------------------------------------------------
 
@@ -503,29 +542,39 @@ class SwarmEngine:
         compression but the caller didn't thread state (the direct engine
         tuple API): a zero reference per call — stateless quantization, so
         the knob is honoured (never a silent f32 no-op) even without the
-        session's carried ``SwarmState.wire``."""
-        if (wire is not None or self.backend != "host"
-                or self.wire_dtype == "f32"):
+        session's carried ``SwarmState.wire``. On the gossip backend the
+        int8 wire state is the schedule-specific sharded mesh EF pytree
+        (`gossip.init_mesh_wire`); bf16 stays a stateless cast (no state)."""
+        if wire is not None or self.wire_dtype == "f32":
             return wire
         payload = (split_adapters(params)[0] if self.cfg.lora_only
                    else params)
-        return comms.init_wire(payload)
+        if self.backend == "host":
+            return comms.init_wire(payload)
+        if self.wire_dtype != "int8":
+            return None
+        from repro.core import gossip
+        return gossip.init_mesh_wire(self.sync_schedule.name, payload,
+                                     n_shards=self.mesh.shape[self.axis],
+                                     wire_block=self.wire_block)
 
     def sync(self, params, val, active=None, stats=None, wire=None):
         """propose → in-graph validate → gate → fused commit. Pure/traceable.
 
-        ``wire`` (engine/"host" backend only): the error-feedback wire
-        reference θ̂ from `core.comms` — peers merge the int8/bf16 wire
-        reconstruction θ̂' instead of the exact params, rejected nodes keep
-        exact f32 locals, and the commit runs through the fused Pallas
-        quantize→merge→dequantize kernel. The advanced reference is returned
-        in the log under ``"wire"``.
+        ``wire``: the error-feedback wire state from `core.comms` /
+        `core.gossip` — peers merge the int8/bf16 wire reconstruction θ̂'
+        instead of the exact params and rejected nodes keep exact f32
+        locals. On the host backend the commit runs through the fused Pallas
+        quantize→merge→dequantize kernel; on the gossip backend the q8
+        collective schedules advance the sharded mesh EF state in-graph.
+        The advanced state is returned in the log under ``"wire"``.
         """
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
              else jnp.asarray(active).astype(bool))
         wire = self._auto_wire(params, wire)
         use_wire = wire is not None and self.backend == "host"
+        use_mesh_wire = wire is not None and self.backend == "gossip"
         log = {}
         if use_wire:
             if self.cfg.lora_only:
@@ -557,6 +606,14 @@ class SwarmEngine:
                                                    self.wire_block)
             candidate, W, imp = self.propose(eff, active, fishers=fishers,
                                              stats=None)
+        elif use_mesh_wire:
+            # sharded mesh EF wire: the q8 collective schedule quantizes,
+            # exchanges, and reconstructs in-graph; stats are the raw
+            # importance accumulators (finalized inside _propose_gossip)
+            candidate, new_mesh_wire = self._propose_gossip(
+                params, active, stats, wire)
+            W = imp = None
+            log["wire"] = new_mesh_wire
         else:
             candidate, W, imp = self.propose(params, active, stats=stats)
         metric_local = jnp.where(a, self._veval(params, val), 1.0)

@@ -20,7 +20,29 @@ sharded over a mesh axis (the swarm axis — `node` single-pod, `pod` multi-pod)
 
 Which schedule a given config lowers to is decided by the `core.comms` cost
 model (`comms.pick_schedule`); ``wire_dtype`` compresses point-to-point
-payloads (bf16 on the mesh; int8 error-feedback lives on the engine backend).
+payloads: bf16 is a stateless cast, and int8 rides the **mesh error-feedback
+wire** — the ``*_q8`` schedule forms below carry a sharded EF reference
+(per-shard residual pytree in the SPMD gossip state) so the collectives move
+int8 payloads + per-block f32 scales instead of f32/bf16 values:
+
+  * ``ring_rows_gossip_q8`` / ``ring_topo_fisher_gossip_q8`` — the ppermute
+    schedules with int8 deltas against per-node references; each device also
+    tracks its two ring neighbours' references (updated from the same delta
+    stream the senders apply, so replicas never diverge).
+  * ``matrix_gossip_q8`` / ``topo_fisher_gossip_q8`` — the gathered forms
+    with ONE int8 all_gather of every node's delta; every device carries the
+    full reconstruction table (replicated — all devices receive the same
+    deltas, so the table stays bit-identical across the mesh).
+  * ``fedavg_psum_q8`` / ``fisher_psum_q8`` — the psum family rebuilt as a
+    compression-aware reduction: quantized-chunk reduce-scatter (all_to_all
+    of int8 chunks + local dequant-and-sum at the chunk owner, with a
+    second-stage EF residual per chunk) followed by a quantized all_gather
+    of the reduced chunks into a replicated consensus accumulator.
+
+All quantization goes through the shared `core.comms` quant core, so the
+mesh wire can never diverge from the engine-backend EF contract. Every EF
+residual telescopes: on settling inputs the reconstructions converge to the
+exact f32 payloads and the merges to their uncompressed oracles.
 
 All schedules return a stacked pytree of the same structure. `None` leaves
 (the non-payload part when lora_only sync is active) pass through untouched.
@@ -33,16 +55,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import comms
+
 try:  # jax>=0.6
     from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _sm
+    from jax.experimental.shard_map import shard_map as _shard_map
 
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep=True):
+    # check_rep=False: the q8 schedules return replicated state (the
+    # reconstruction table / consensus accumulator) that IS identical on
+    # every device — each applies the same all_gathered deltas — but the
+    # static replication checker can't see through the axis_index arithmetic
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check_rep is True:
+        return _shard_map(f, **kw)
+    try:
+        return _shard_map(f, check_rep=False, **kw)
+    except TypeError:  # pragma: no cover — kwarg renamed in newer jax
+        return _shard_map(f, check_vma=False, **kw)
 
 
 def _mapped(fn, mesh, axis, stacked, *extra, inner_specs=None):
@@ -71,19 +103,19 @@ def _mapped(fn, mesh, axis, stacked, *extra, inner_specs=None):
 
 
 def _wire_cast(z, wire_dtype):
-    """Cast a payload for the wire (point-to-point collectives only).
-
-    bf16 halves link bytes; accumulation stays f32 after decode. int8 needs
-    the engine backend's error-feedback state (`core.comms`) — a stateless
-    int8 mesh wire would silently drop mass, so it is refused here.
+    """STATELESS cast of a payload for the wire (point-to-point collectives
+    only). bf16 halves link bytes; accumulation stays f32 after decode.
+    int8 is refused here because a stateless int8 wire would silently drop
+    mass — it rides the ``*_q8`` error-feedback schedule forms below, which
+    carry the sharded mesh EF state instead.
     """
     if wire_dtype in (None, "f32"):
         return z
     if wire_dtype == "bf16":
         return z.astype(jnp.bfloat16)
-    raise ValueError(f"wire_dtype {wire_dtype!r} is not supported on the "
-                     "mesh gossip path (int8 needs error-feedback state; "
-                     "use the engine backend)")
+    raise ValueError(f"wire_dtype {wire_dtype!r} has no stateless mesh cast "
+                     "(int8 needs error-feedback state — the *_q8 schedule "
+                     "forms carry it)")
 
 
 def fedavg_gossip(stacked, weights, mesh, axis: str, inner_specs=None):
@@ -294,6 +326,429 @@ def ring_topo_fisher_gossip(stacked, fishers, rows, mesh, axis: str,
     Wj = jnp.asarray(rows, jnp.float32)
     return _fisher_pair_map(f, mesh, axis, stacked, fishers, (Wj,),
                             inner_specs)
+
+
+# ---------------------------------------------------------------------------
+# mesh int8 error-feedback wire: the *_q8 schedule forms
+# ---------------------------------------------------------------------------
+# Per-leaf EF codec (runs INSIDE shard_map, on local shards). The payload is
+# flattened per row, zero-padded to the wire-block grid, and delta-encoded
+# against a same-shaped reference through the shared `core.comms` quant core;
+# the padded tail stays exactly zero on both sides, so references can be
+# stored in payload shape and re-padded every round without drift.
+
+def _ef_encode(z, ref, wire_block: int, pad_to: int = 0):
+    """(z, ref) local [rows, ...] → (q int8 [rows, Dp], scales f32
+    [rows, Dp/wb], ref' [rows, ...]) with ref' = ref + dequant(q·s)."""
+    rows = z.shape[0]
+    flat = z.astype(jnp.float32).reshape(rows, -1)
+    rflat = ref.astype(jnp.float32).reshape(rows, -1)
+    d = flat.shape[1]
+    grid = max(wire_block, pad_to)
+    pad = (-d) % grid
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        rflat = jnp.pad(rflat, ((0, 0), (0, pad)))
+    q, s = comms.quant_encode(flat - rflat, wire_block)
+    ref2 = rflat + comms.quant_decode(q, s, wire_block)
+    return q, s, ref2[:, :d].reshape(ref.shape)
+
+
+def _ef_apply(ref, q, s, wire_block: int):
+    """Receiver side: advance a reference replica with a received (q, s)
+    payload — bit-identical to the sender's own `_ef_encode` advance."""
+    rows = ref.shape[0]
+    rflat = ref.astype(jnp.float32).reshape(rows, -1)
+    d = rflat.shape[1]
+    deq = comms.quant_decode(q, s, wire_block)[:, :d]
+    return (rflat + deq).reshape(ref.shape)
+
+
+def _leafwise(fn, trees, n_out: int):
+    """Apply ``fn(*leaves) -> n_out-tuple`` leaf-wise over parallel pytrees
+    (explicit flatten, so structural tuples in params can't be confused with
+    the output tuples); None payload leaves map to None in every output."""
+    nones = lambda v: v is None
+    flats = [jax.tree_util.tree_flatten(t, is_leaf=nones)[0] for t in trees]
+    treedef = jax.tree_util.tree_flatten(trees[0], is_leaf=nones)[1]
+    outs = [[] for _ in range(n_out)]
+    for leaves in zip(*flats):
+        res = (None,) * n_out if leaves[0] is None else fn(*leaves)
+        for acc, r in zip(outs, res):
+            acc.append(r)
+    return tuple(jax.tree_util.tree_unflatten(treedef, acc) for acc in outs)
+
+
+def _inner_spec_tree(stacked, inner_specs):
+    if inner_specs is None:
+        return jax.tree.map(lambda x: None, stacked,
+                            is_leaf=lambda v: v is None)
+    return inner_specs
+
+
+def _padded_chunk(shape, n: int, wire_block: int) -> int:
+    """Per-shard chunk length of a leaf row flattened and padded to the
+    n·wire_block grid (the psum-q8 reduce-scatter layout)."""
+    d = 1
+    for s in shape[1:]:
+        d *= s
+    grid = n * wire_block
+    return (-(-d // grid) * grid) // n
+
+
+def init_mesh_wire(schedule: str, payload, *, n_shards: int,
+                   wire_block: int = 512):
+    """Zero EF wire state for a ``*_q8`` mesh schedule over a stacked payload
+    pytree ([N, ...] leaves; None leaves mirror as None). The returned pytree
+    rides ``SwarmState.wire`` next to the params:
+
+      ring:      {"ref", "left", "right"} — own + neighbour-replica
+                 references, payload-shaped, sharded by node
+                 (weighted forms: each a {"num", "mass"} pair of trees)
+      gathered:  {"table"} — the full reconstruction table, replicated
+      psum q8:   {"ref"} per-shard contribution reference (one row/shard),
+                 {"cons"} replicated consensus row, {"cres"} second-stage
+                 chunk residual (one chunk per shard)
+    """
+    nones = lambda v: v is None
+    zlike = lambda x: (None if x is None
+                       else jnp.zeros(x.shape, jnp.float32))
+    zrow = lambda x: (None if x is None
+                      else jnp.zeros((1,) + x.shape[1:], jnp.float32))
+    zshard = lambda x: (None if x is None
+                        else jnp.zeros((n_shards,) + x.shape[1:], jnp.float32))
+    zchunk = lambda x: (None if x is None else jnp.zeros(
+        (n_shards, _padded_chunk(x.shape, n_shards, wire_block)), jnp.float32))
+    tmap = lambda f: jax.tree.map(f, payload, is_leaf=nones)
+    pair = lambda f: {"num": tmap(f), "mass": tmap(f)}
+    if schedule == "ring_ppermute":
+        return {"ref": tmap(zlike), "left": tmap(zlike), "right": tmap(zlike)}
+    if schedule == "ring_topo_ppermute":
+        return {"ref": pair(zlike), "left": pair(zlike), "right": pair(zlike)}
+    if schedule == "gathered_rows":
+        return {"table": tmap(zlike)}
+    if schedule == "gathered_topo_stack":
+        return {"table": pair(zlike)}
+    if schedule == "fedavg_psum_q8":
+        return {"ref": tmap(zshard), "cons": tmap(zrow), "cres": tmap(zchunk)}
+    if schedule == "fisher_psum_q8":
+        return {"ref": pair(zshard), "cons": pair(zrow), "cres": pair(zchunk)}
+    raise ValueError(f"no mesh wire state for schedule {schedule!r}")
+
+
+def ring_rows_gossip_q8(stacked, W, wire, mesh, axis: str, inner_specs=None,
+                        wire_block: int = 512):
+    """int8-EF form of :func:`ring_rows_gossip`: the two ppermutes move int8
+    deltas + per-block scales (~2·P bytes + 8·P/wire_block per sync instead
+    of 8·P f32 bytes). Each device advances its own reference and its two
+    neighbour replicas from the identical delta stream, so reconstructions
+    match the senders bit-for-bit; the self term stays exact local f32.
+    Returns ``(merged, new_wire)``."""
+    _check_one_node_per_shard(stacked, mesh, axis, "ring_rows_gossip_q8")
+    n = mesh.shape[axis]
+    fwd, bwd = _ring_perms(n)
+    Wj = jnp.asarray(W, jnp.float32)
+
+    def f(x, ref, lft, rgt, Wm):
+        idx = jax.lax.axis_index(axis)
+        q, s, ref2 = _ef_encode(x, ref, wire_block)
+        ql = jax.lax.ppermute(q, axis, fwd)
+        sl = jax.lax.ppermute(s, axis, fwd)
+        qr = jax.lax.ppermute(q, axis, bwd)
+        sr = jax.lax.ppermute(s, axis, bwd)
+        lft2 = _ef_apply(lft, ql, sl, wire_block)
+        rgt2 = _ef_apply(rgt, qr, sr, wire_block)
+        w_self = Wm[idx, idx]
+        w_left = Wm[idx, (idx - 1) % n]
+        w_right = Wm[idx, (idx + 1) % n]
+        out = (w_self * x.astype(jnp.float32) + w_left * lft2
+               + w_right * rgt2)
+        return out.astype(x.dtype), ref2, lft2, rgt2
+
+    def leaf(x, ref, lft, rgt, spec):
+        in_spec = P(axis, *(tuple(spec) if spec is not None else ()))
+        sm = shard_map(f, mesh, in_specs=(in_spec,) * 4 + (P(),),
+                       out_specs=(in_spec,) * 4)
+        return sm(x, ref, lft, rgt, Wj)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    merged, ref2, lft2, rgt2 = _leafwise(
+        leaf, (stacked, wire["ref"], wire["left"], wire["right"], specs), 4)
+    return merged, {"ref": ref2, "left": lft2, "right": rgt2}
+
+
+def ring_topo_fisher_gossip_q8(stacked, fishers, rows, wire, mesh, axis: str,
+                               inner_specs=None, eps: float = 1e-8,
+                               wire_block: int = 512):
+    """int8-EF form of :func:`ring_topo_fisher_gossip`: the fused
+    ``(F⊙θ ⊕ F)`` side-channel rides the wire as two delta-encoded streams
+    (numerator and mass, each int8 + scales) against per-node references
+    with neighbour replicas — ~4·P wire bytes per sync instead of 16·P.
+    Self contributions never touch the wire (exact f32).
+    Returns ``(merged, new_wire)``."""
+    _check_one_node_per_shard(stacked, mesh, axis,
+                              "ring_topo_fisher_gossip_q8")
+    n = mesh.shape[axis]
+    fwd, bwd = _ring_perms(n)
+    Wj = jnp.asarray(rows, jnp.float32)
+
+    def f(x, fsh, rn, rm, ln, lm, rgn, rgm, Wm):
+        idx = jax.lax.axis_index(axis)
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        y = ff * xf
+        # the num and mass streams ride as ONE stacked (F⊙θ ⊕ F) payload —
+        # per-row quantization blocks are unchanged, but each direction
+        # launches one int8 ppermute + one scale ppermute instead of four
+        z = jnp.concatenate([y, ff], axis=0)              # [2, ...]
+        refs = jnp.concatenate([rn, rm], axis=0)
+        q, s, ref2 = _ef_encode(z, refs, wire_block)
+        ql = jax.lax.ppermute(q, axis, fwd)
+        sl = jax.lax.ppermute(s, axis, fwd)
+        qr = jax.lax.ppermute(q, axis, bwd)
+        sr = jax.lax.ppermute(s, axis, bwd)
+        lft2 = _ef_apply(jnp.concatenate([ln, lm], axis=0), ql, sl,
+                         wire_block)
+        rgt2 = _ef_apply(jnp.concatenate([rgn, rgm], axis=0), qr, sr,
+                         wire_block)
+        r_self = Wm[idx, idx]
+        r_left = Wm[idx, (idx - 1) % n]
+        r_right = Wm[idx, (idx + 1) % n]
+        num = r_self * y + r_left * lft2[0:1] + r_right * rgt2[0:1]
+        den = r_self * ff + r_left * lft2[1:2] + r_right * rgt2[1:2]
+        return ((num / jnp.maximum(den, 1e-30)).astype(x.dtype),
+                ref2[0:1], ref2[1:2], lft2[0:1], lft2[1:2],
+                rgt2[0:1], rgt2[1:2])
+
+    def leaf(x, fsh, rn, rm, ln, lm, rgn, rgm, spec):
+        in_spec = P(axis, *(tuple(spec) if spec is not None else ()))
+        sm = shard_map(f, mesh, in_specs=(in_spec,) * 8 + (P(),),
+                       out_specs=(in_spec,) * 7)
+        return sm(x, fsh, rn, rm, ln, lm, rgn, rgm, Wj)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    ref, lft, rgt = wire["ref"], wire["left"], wire["right"]
+    merged, rn2, rm2, ln2, lm2, rgn2, rgm2 = _leafwise(
+        leaf, (stacked, fishers, ref["num"], ref["mass"], lft["num"],
+               lft["mass"], rgt["num"], rgt["mass"], specs), 7)
+    return merged, {"ref": {"num": rn2, "mass": rm2},
+                    "left": {"num": ln2, "mass": lm2},
+                    "right": {"num": rgn2, "mass": rgm2}}
+
+
+def matrix_gossip_q8(stacked, W, wire, mesh, axis: str, inner_specs=None,
+                     wire_block: int = 512):
+    """int8-EF form of :func:`matrix_gossip` (the ``gathered_rows`` q8
+    schedule): ONE int8 all_gather of every node's delta + scales; each
+    device advances the full replicated reconstruction table (all devices
+    see the same deltas, so the table stays bit-identical across the mesh)
+    and contracts its mixing rows against the reconstructions.
+    Returns ``(merged, new_wire)``."""
+    n = mesh.shape[axis]
+    Wj = jnp.asarray(W, jnp.float32)
+
+    def f(x, table, Wm):  # x: [per, ...] local; table: [N, ...] replicated
+        idx = jax.lax.axis_index(axis)
+        per = x.shape[0]
+        myref = jax.lax.dynamic_slice_in_dim(table, idx * per, per, 0)
+        q, s, _ = _ef_encode(x.astype(jnp.float32), myref, wire_block)
+        allq = jax.lax.all_gather(q, axis, tiled=True)    # [N, Dp] int8
+        alls = jax.lax.all_gather(s, axis, tiled=True)    # [N, Dp/wb] f32
+        table2 = _ef_apply(table, allq, alls, wire_block)
+        rows = jax.lax.dynamic_slice_in_dim(Wm, idx * per, per, 0)  # [per, N]
+        out = rows @ table2.reshape(table2.shape[0], -1)
+        return out.reshape(x.shape).astype(x.dtype), table2
+
+    def leaf(x, table, spec):
+        inner = tuple(spec) if spec is not None else ()
+        in_spec = P(axis, *inner)
+        tab_spec = P(None, *inner)
+        sm = shard_map(f, mesh, in_specs=(in_spec, tab_spec, P()),
+                       out_specs=(in_spec, tab_spec), check_rep=False)
+        return sm(x, table, Wj)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    merged, table2 = _leafwise(leaf, (stacked, wire["table"], specs), 2)
+    return merged, {"table": table2}
+
+
+def topo_fisher_gossip_q8(stacked, fishers, rows, wire, mesh, axis: str,
+                          inner_specs=None, eps: float = 1e-8,
+                          wire_block: int = 512):
+    """int8-EF form of :func:`topo_fisher_gossip` (the
+    ``gathered_topo_stack`` q8 schedule): the importance-weighted numerator
+    and mass streams are delta-encoded against a replicated reconstruction
+    table and moved by ONE stacked int8 all_gather plus one scale gather
+    (PR 4's fused-gather invariant, kept at the q8 byte cost), then
+    contracted per mixing row. Returns ``(merged, new_wire)``."""
+    n = mesh.shape[axis]
+    Wj = jnp.asarray(rows, jnp.float32)
+
+    def f(x, fsh, tn, tm, Wm):
+        idx = jax.lax.axis_index(axis)
+        per = x.shape[0]
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        y = ff * xf
+        refn = jax.lax.dynamic_slice_in_dim(tn, idx * per, per, 0)
+        refm = jax.lax.dynamic_slice_in_dim(tm, idx * per, per, 0)
+        z = jnp.concatenate([y, ff], axis=0)              # [2·per, ...]
+        refs = jnp.concatenate([refn, refm], axis=0)
+        q, s, _ = _ef_encode(z, refs, wire_block)
+        allq = jax.lax.all_gather(q, axis, tiled=True)    # [N·2·per, Dp]
+        alls = jax.lax.all_gather(s, axis, tiled=True)
+        gq = allq.reshape(n, 2, per, allq.shape[-1])      # shard-major
+        gs = alls.reshape(n, 2, per, alls.shape[-1])
+        tn2 = _ef_apply(tn, gq[:, 0].reshape(n * per, -1),
+                        gs[:, 0].reshape(n * per, -1), wire_block)
+        tm2 = _ef_apply(tm, gq[:, 1].reshape(n * per, -1),
+                        gs[:, 1].reshape(n * per, -1), wire_block)
+        r = jax.lax.dynamic_slice_in_dim(Wm, idx * per, per, 0)   # [per, N]
+        num = r @ tn2.reshape(tn2.shape[0], -1)
+        den = r @ tm2.reshape(tm2.shape[0], -1)
+        out = num / jnp.maximum(den, 1e-30)
+        return out.reshape(x.shape).astype(x.dtype), tn2, tm2
+
+    def leaf(x, fsh, tn, tm, spec):
+        inner = tuple(spec) if spec is not None else ()
+        in_spec = P(axis, *inner)
+        tab_spec = P(None, *inner)
+        sm = shard_map(f, mesh,
+                       in_specs=(in_spec, in_spec, tab_spec, tab_spec, P()),
+                       out_specs=(in_spec, tab_spec, tab_spec),
+                       check_rep=False)
+        return sm(x, fsh, tn, tm, Wj)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    tab = wire["table"]
+    merged, tn2, tm2 = _leafwise(
+        leaf, (stacked, fishers, tab["num"], tab["mass"], specs), 3)
+    return merged, {"table": {"num": tn2, "mass": tm2}}
+
+
+def _psum_q8_stream(z, ref, cons, cres, axis, n: int, wire_block: int):
+    """One delta-consensus EF stream of the compression-aware psum:
+
+      1. delta-encode the local contribution z against its per-shard
+         reference (int8 + scales; reference advances locally),
+      2. quantized-chunk reduce-scatter: all_to_all of int8 chunks, local
+         dequant + sum at each chunk owner (f32 accumulation),
+      3. second-stage EF: the owner re-quantizes its reduced chunk against
+         a per-chunk residual, and the int8 chunks are all_gathered into
+         the replicated consensus accumulator.
+
+    Returns ``(consensus_row', ref', cons', cres')`` — all errors live in
+    EF residuals, so the consensus telescopes to Σ_j z_j exactly as inputs
+    settle. Runs INSIDE shard_map: z/ref/cons [1, ...row], cres [1, chunk].
+    """
+    q, s, ref2 = _ef_encode(z, ref, wire_block, pad_to=n * wire_block)
+    dp = q.shape[1]
+    chunk = dp // n
+    qc = q.reshape(n, chunk)
+    sc = s.reshape(n, chunk // wire_block)
+    qx = jax.lax.all_to_all(qc, axis, split_axis=0, concat_axis=0)
+    sx = jax.lax.all_to_all(sc, axis, split_axis=0, concat_axis=0)
+    deq = comms.quant_decode(qx, sx, wire_block)          # [n, chunk] f32
+    u = deq.sum(0, keepdims=True) + cres                  # [1, chunk]
+    q2, s2 = comms.quant_encode(u, wire_block)
+    cres2 = u - comms.quant_decode(q2, s2, wire_block)
+    aq = jax.lax.all_gather(q2, axis, tiled=True)         # [n, chunk] int8
+    as_ = jax.lax.all_gather(s2, axis, tiled=True)
+    dhat = comms.quant_decode(aq, as_, wire_block).reshape(1, dp)
+    cflat = cons.astype(jnp.float32).reshape(1, -1)
+    d = cflat.shape[1]
+    cons2 = (cflat + dhat[:, :d]).reshape(cons.shape)
+    return cons2, ref2, cons2, cres2
+
+
+def fedavg_psum_q8(stacked, weights, wire, mesh, axis: str, inner_specs=None,
+                   wire_block: int = 512):
+    """Compression-aware weighted global merge (the ``fedavg_psum_q8``
+    schedule): every node ends with the replicated consensus reconstruction
+    of Σ_j w_j θ_j, built from int8 wire traffic only (see
+    :func:`_psum_q8_stream`). Weights may be traced (runtime membership).
+    Returns ``(merged, new_wire)``."""
+    n = mesh.shape[axis]
+    if inner_specs is not None and any(
+            s is not None for s in jax.tree.leaves(inner_specs)):
+        raise ValueError("fedavg_psum_q8 does not support model-sharded "
+                         "payloads (inner_specs); use a ring/gathered "
+                         "schedule or wire_dtype='bf16'")
+    w = jnp.asarray(weights, jnp.float32)
+
+    def f(x, ref, cons, cres, wv):
+        idx = jax.lax.axis_index(axis)
+        per = x.shape[0]
+        wl = jax.lax.dynamic_slice_in_dim(wv, idx * per, per, 0)
+        z = (x.astype(jnp.float32)
+             * wl.reshape((per,) + (1,) * (x.ndim - 1))).sum(0, keepdims=True)
+        cons_row, ref2, cons2, cres2 = _psum_q8_stream(
+            z, ref, cons, cres, axis, n, wire_block)
+        merged = jnp.broadcast_to(cons_row, x.shape).astype(x.dtype)
+        return merged, ref2, cons2, cres2
+
+    def leaf(x, ref, cons, cres, spec):
+        in_spec = P(axis)
+        sm = shard_map(f, mesh,
+                       in_specs=(in_spec, in_spec, P(), in_spec, P()),
+                       out_specs=(in_spec, in_spec, P(), in_spec),
+                       check_rep=False)
+        return sm(x, ref, cons, cres, w)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    merged, ref2, cons2, cres2 = _leafwise(
+        leaf, (stacked, wire["ref"], wire["cons"], wire["cres"], specs), 4)
+    return merged, {"ref": ref2, "cons": cons2, "cres": cres2}
+
+
+def fisher_psum_q8(stacked, fishers, wire, mesh, axis: str, inner_specs=None,
+                   eps: float = 1e-8, wire_block: int = 512):
+    """Compression-aware importance-weighted global merge (the
+    ``fisher_psum_q8`` schedule): numerator Σ (F+eps)⊙θ and mass Σ (F+eps)
+    each ride one delta-consensus EF stream (int8 reduce-scatter +
+    all_gather); the merge is the ratio of the two replicated consensus
+    reconstructions. Any weight folding (gradmatch) happens in the mass
+    before the call, exactly like :func:`fisher_gossip`.
+    Returns ``(merged, new_wire)``."""
+    n = mesh.shape[axis]
+    if inner_specs is not None and any(
+            s is not None for s in jax.tree.leaves(inner_specs)):
+        raise ValueError("fisher_psum_q8 does not support model-sharded "
+                         "payloads (inner_specs); use a ring/gathered "
+                         "schedule or wire_dtype='bf16'")
+
+    def f(x, fsh, rn, rm, cn, cm, qn_res, qm_res):
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        zn = (ff * xf).sum(0, keepdims=True)
+        zm = ff.sum(0, keepdims=True)
+        num_row, rn2, cn2, qn2 = _psum_q8_stream(
+            zn, rn, cn, qn_res, axis, n, wire_block)
+        den_row, rm2, cm2, qm2 = _psum_q8_stream(
+            zm, rm, cm, qm_res, axis, n, wire_block)
+        merged = num_row / jnp.maximum(den_row, 1e-30)
+        return (jnp.broadcast_to(merged, x.shape).astype(x.dtype),
+                rn2, rm2, cn2, cm2, qn2, qm2)
+
+    def leaf(x, fsh, rn, rm, cn, cm, qn_res, qm_res, spec):
+        in_spec = P(axis)
+        sm = shard_map(
+            f, mesh,
+            in_specs=(in_spec, in_spec, in_spec, in_spec, P(), P(),
+                      in_spec, in_spec),
+            out_specs=(in_spec, in_spec, in_spec, P(), P(), in_spec,
+                       in_spec),
+            check_rep=False)
+        return sm(x, fsh, rn, rm, cn, cm, qn_res, qm_res)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    ref, cons, cres = wire["ref"], wire["cons"], wire["cres"]
+    merged, rn2, rm2, cn2, cm2, qn2, qm2 = _leafwise(
+        leaf, (stacked, fishers, ref["num"], ref["mass"], cons["num"],
+               cons["mass"], cres["num"], cres["mass"], specs), 7)
+    return merged, {"ref": {"num": rn2, "mass": rm2},
+                    "cons": {"num": cn2, "mass": cm2},
+                    "cres": {"num": qn2, "mass": qm2}}
 
 
 def matrix_gossip(stacked, W, mesh, axis: str, inner_specs=None,

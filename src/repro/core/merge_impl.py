@@ -180,6 +180,10 @@ class MergeStrategy:
 
     method = "mean"
     uses_stats = False
+    #: mass floor shared by every weighted-merge realization (host ratio,
+    #: fused kernel imp, mesh psum/ppermute/gathered schedules and their
+    #: q8 EF forms) — dispatch reads it off the strategy unconditionally
+    eps = 1e-8
 
     def init_stats(self, stacked):
         """Per-node importance accumulators (None: method needs none)."""

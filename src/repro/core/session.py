@@ -61,8 +61,10 @@ class SwarmState:
 
     params / opt_state / stats are **stacked** pytrees (leading node axis N);
     ``stats`` carries the merge strategy's importance accumulators (None for
-    mean/fedavg). ``wire`` is the quantized-sync error-feedback reference θ̂
-    (`core.comms`; None unless ``cfg.wire_dtype`` enables wire compression).
+    mean/fedavg). ``wire`` is the quantized-sync error-feedback state: the
+    θ̂ reference on the engine backend (`core.comms`), the schedule-specific
+    sharded mesh EF pytree on the gossip backend (`core.gossip`), and None
+    unless ``cfg.wire_dtype`` enables stateful wire compression.
     ``active`` is the runtime membership mask, ``rng`` a (legacy uint32)
     PRNG key folded once per round, ``round``/``step`` the global counters.
     All fields are data — membership changes, resumed counters, and reseeded
@@ -155,8 +157,9 @@ class SwarmSession:
         if wire_dtype != "f32" and backend == "host":
             raise ValueError(
                 "wire_dtype compression needs a compiled backend "
-                '(backend="engine" carries the error-feedback state; '
-                '"gossip" supports bf16); the host loop is uncompressed')
+                '(backend="engine" carries the error-feedback reference; '
+                '"gossip" carries the sharded mesh EF state for int8 and '
+                "casts bf16); the host loop is uncompressed")
 
         if backend == "host":
             from repro.core.swarm import NodeState, SwarmLearner
@@ -184,15 +187,12 @@ class SwarmSession:
             backend="gossip" if backend == "gossip" else "host",
             mesh=mesh, axis=axis, param_specs=param_specs, block=block,
             interpret=interpret, strategy=strategy)
-        wire = None
-        if wire_dtype != "f32" and backend == "engine":
-            # error-feedback reference θ̂ for the quantized wire — shaped
-            # like the sync payload (adapters only under lora_only)
-            payload = stacked_params
-            if cfg.lora_only:
-                from repro.core.lora import split_adapters
-                payload = split_adapters(stacked_params)[0]
-            wire = comms.init_wire(payload)
+        # error-feedback wire state for the quantized sync — the engine
+        # backend carries the θ̂ reference (shaped like the sync payload,
+        # adapters only under lora_only); the gossip backend carries the
+        # schedule-specific sharded mesh EF pytree; bf16-on-mesh is a
+        # stateless cast (no state)
+        wire = self.engine._auto_wire(stacked_params, None)
         self._state = SwarmState(
             params=stacked_params, opt_state=stacked_opt,
             stats=self.engine.init_stats(stacked_params), wire=wire,

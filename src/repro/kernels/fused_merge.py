@@ -191,22 +191,16 @@ def fused_merge_all(stacked, W, gates, imp=None, *, block: int = DEFAULT_BLOCK,
 # ---------------------------------------------------------------------------
 # quantized-wire commit: quantize -> merge -> dequantize in one VMEM pass
 # ---------------------------------------------------------------------------
+# The per-block round-trip is `core.comms.quant_dequant_block` — the ONE
+# shared implementation (kernels import core.comms; no second quantization
+# body anywhere), so the fused commit can never silently diverge from the
+# XLA ground truth the candidate (gate) path computes. The import is lazy:
+# `repro.core.__init__` imports the engine, which imports this module, so a
+# module-level import back into the package would be init-order-sensitive.
 
 def _quant_block(v, wire_dtype: str, wire_block: int):
-    """Deterministic per-(node, wire-block) quantize→dequantize of [N, B]
-    (B a multiple of wire_block). Must stay arithmetic-identical to
-    `core.comms._leaf_quant_dequant` — the XLA ground truth the candidate
-    (gate) path computes."""
-    if wire_dtype == "f32":
-        return v
-    if wire_dtype == "bf16":
-        return v.astype(jnp.bfloat16).astype(jnp.float32)
-    n, b = v.shape
-    blocks = v.reshape(n, b // wire_block, wire_block)
-    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
-    q = jnp.clip(jnp.round(blocks / jnp.where(scale > 0, scale, 1.0)),
-                 -127.0, 127.0)
-    return (q * scale).reshape(n, b)
+    from repro.core.comms import quant_dequant_block
+    return quant_dequant_block(v, wire_dtype, wire_block)
 
 
 def _quant_merge_kernel(x_ref, r_ref, w_ref, g_ref, o_ref, ro_ref, *,

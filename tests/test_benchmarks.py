@@ -8,6 +8,10 @@ import sys
 
 import pytest
 
+# the smoke suite spawns the same forced-CPU-mesh subprocesses as the SPMD
+# parity tests — shard it into the parallel CI job with them
+pytestmark = pytest.mark.spmd
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
@@ -94,6 +98,24 @@ def test_smoke_covers_ring_sync_parity(smoke_out):
     assert float(_row(smoke_out, "ring_sync_gathered_max_diff")[2]) < 1e-5
     assert float(_row(smoke_out, "ring_sync_ppermute_P_values")[2]) <= 4.5
     assert float(_row(smoke_out, "ring_sync_bytes_ratio")[2]) < 1.0
+
+
+def test_smoke_covers_mesh_wire(smoke_out):
+    """The int8 mesh EF wire rows: settled parity ≤ 1e-5 vs the host oracle
+    and HLO-measured collective bytes ≤ 0.30× the f32 schedule."""
+    assert float(_row(smoke_out, "mesh_wire_q8_settled_max_diff")[2]) < 1e-5
+    assert float(_row(smoke_out, "mesh_wire_bytes_ratio")[2]) <= 0.30
+
+
+def test_smoke_sections_go_to_scratch_not_the_committed_json(smoke_out):
+    """Bench artifact hygiene (ROADMAP item): --smoke writes its JSON to the
+    gitignored .bench/ scratch path, so tier-1 leaves the committed
+    BENCH_swarm_sync.json untouched (CI runs `git diff --exit-code`)."""
+    path = _row(smoke_out, "swarm_sync_json")[2].strip()
+    assert os.path.basename(os.path.dirname(path)) == ".bench"
+    with open(path) as f:
+        doc = json.load(f)
+    assert "mesh_wire_smoke" in doc
 
 
 def test_smoke_covers_dynamic_membership(smoke_out):

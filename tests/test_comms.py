@@ -14,6 +14,7 @@ Pins the ISSUE 4 acceptance criteria:
   * invalid combinations fail loudly (host backend, mesh int8, bad dtypes).
 """
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -93,17 +94,23 @@ def test_ring_schedules_beat_gather_by_n_over_constant():
         assert ring.bytes_per_sync(1 << 20) < gather.bytes_per_sync(1 << 20)
 
 
-def test_int8_wire_flips_full_fisher_to_gathered():
-    """Cost-model-driven choice, not a hardcoded table: the psum must reduce
-    in f32, so an int8 wire makes the gathered stack cheaper for full-
-    topology fisher — the picker follows the bytes."""
+def test_int8_wire_flips_full_fisher_off_the_f32_psum():
+    """Cost-model-driven choice, not a hardcoded table: the plain psum must
+    reduce in f32, so an int8 wire flips full-topology fisher off it — onto
+    the compression-aware ``fisher_psum_q8`` reduction (4·P int8 values),
+    which also undercuts the gathered stack (2·N·P int8). The picker follows
+    the bytes."""
     f32 = comms.pick_schedule(_cfg(topology="full", merge="fisher"))
     assert f32.name == "fisher_psum"
     i8 = comms.pick_schedule(
         _cfg(topology="full", merge="fisher", wire_dtype="int8"))
-    assert i8.name == "gathered_topo_stack"
+    assert i8.name == "fisher_psum_q8"
     p = 1 << 20
     assert i8.bytes_per_sync(p) < f32.bytes_per_sync(p)
+    gathered = [s for s in comms.candidate_schedules(
+        _cfg(topology="full", merge="fisher", wire_dtype="int8"))
+        if s.name == "gathered_topo_stack"][0]
+    assert i8.bytes_per_sync(p) < gathered.bytes_per_sync(p)
 
 
 def test_int8_bytes_include_per_block_scale_overhead():
@@ -112,6 +119,21 @@ def test_int8_bytes_include_per_block_scale_overhead():
     p = 1 << 20
     vals = N * p
     assert s.bytes_per_sync(p) == pytest.approx(vals + vals / 512 * 4)
+
+
+def test_model_sharded_payloads_skip_the_q8_psums():
+    """The q8 psum reductions chunk the globally-flattened payload, which a
+    model axis would scramble — a model-sharded layout must fall back to a
+    q8 schedule that supports inner specs instead of picking one that
+    raises at trace time."""
+    from jax.sharding import PartitionSpec as P
+    cfg = _cfg(topology="full", merge="fisher", wire_dtype="int8")
+    assert comms.pick_schedule(cfg).name == "fisher_psum_q8"
+    sharded = comms.pick_schedule(cfg, model_sharded=True)
+    assert sharded.name == "gathered_topo_stack"
+    assert comms.has_inner_sharding({"w": P("model"), "b": P()})
+    assert not comms.has_inner_sharding({"w": P(None), "b": P()})
+    assert not comms.has_inner_sharding(None)
 
 
 def test_ring_schedule_needs_one_node_per_shard_and_n3():
@@ -141,6 +163,122 @@ def test_validation_errors():
         comms.validate_wire_block(100)
     with pytest.raises(ValueError, match="host loop is uncompressed"):
         _session(_cfg(wire_dtype="int8"), backend="host")
+
+
+# ---------------------------------------------------------------------------
+# cost-model drift gate: CHANGES.md table == pick_schedule, row for row
+# ---------------------------------------------------------------------------
+
+_CHANGES_MD = os.path.join(os.path.dirname(__file__), "..", "CHANGES.md")
+
+
+def _parse_schedule_table():
+    """Rows of the CHANGES.md comms schedule table:
+    (topology, merges, wires, schedule, values-expr, collective)."""
+    lines = open(_CHANGES_MD).read().splitlines()
+    start = next(i for i, l in enumerate(lines)
+                 if l.startswith("## Comms schedule table"))
+    rows = []
+    for line in lines[start:]:
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) != 6 or cells[0] in ("topology", ""):
+            continue
+        if set(cells[0]) <= {"-"}:
+            continue
+        topo, merges, wires, sched, vals, coll = cells
+        rows.append((topo, merges.split("/"),
+                     ["f32", "bf16", "int8"] if wires == "any"
+                     else wires.split("/"), sched, vals, coll))
+    assert rows, "no schedule table found in CHANGES.md"
+    return rows
+
+
+def _values_per_sync(expr: str, n: int) -> float:
+    """Evaluate a table values/sync expression ('2P·(N−1)/N', '2N·P', …)."""
+    import re
+    s = expr.replace("·", "*").replace("−", "-")
+    s = re.sub(r"(?<=[0-9NP\)])(?=[NP\(])", "*", s)
+    return float(eval(s, {"__builtins__": {}}, {"N": n, "P": 1.0}))
+
+
+def test_cost_model_drift_gate():
+    """The documented schedule table IS the cost model: re-derive every row
+    (topology × merge × wire, at several N) from `comms.pick_schedule` and
+    fail when code and table diverge — in either direction (a schedule the
+    picker chooses that the table doesn't name also fails)."""
+    rows = _parse_schedule_table()
+    table = {}
+    for topo, merges, wires, sched, vals, coll in rows:
+        for m in merges:
+            for wd in wires:
+                assert (topo, m, wd) not in table, ("duplicate table row",
+                                                    topo, m, wd)
+                table[(topo, m, wd)] = (sched, vals, coll)
+    for n in (3, 4, 16):
+        for topo in ("full", "ring", "dynamic"):
+            for m in ("mean", "fedavg", "fisher", "gradmatch"):
+                for wd in ("f32", "bf16", "int8"):
+                    got = comms.pick_schedule(
+                        _cfg(n_nodes=n, topology=topo, merge=m, wire_dtype=wd))
+                    key = (topo, m, wd)
+                    assert key in table, f"picker chose {got.name} for " \
+                        f"{key} but the CHANGES.md table has no such row"
+                    sched, vals, coll = table[key]
+                    assert got.name == sched, (key, n, got.name, sched)
+                    assert got.collective == coll, (key, n, got.collective)
+                    assert got.payload_factor == pytest.approx(
+                        _values_per_sync(vals, n)), (key, n, vals)
+                    # the documented scale-overhead formula: int8 moves one
+                    # byte per value plus 4/wire_block bytes of f32 scales
+                    p = 1 << 18
+                    v = got.payload_factor * p
+                    want = v * comms.WIRE_BYTES[got.wire_dtype]
+                    if got.wire_dtype == "int8":
+                        want += v / got.wire_block * 4.0
+                    assert got.bytes_per_sync(p) == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# shared quantization core: one implementation, everywhere
+# ---------------------------------------------------------------------------
+
+def test_quant_encode_decode_bit_identical_to_round_trip():
+    """decode(encode(v)) == quant_dequant_block(v) == the Pallas kernel's
+    round-trip, bit for bit — the wire payload and the fused commit can
+    never diverge from the EF contract."""
+    from repro.kernels.fused_merge import _quant_block
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(rng.normal(0, 2, (N, 1024)), jnp.float32)
+    a = np.asarray(comms.quant_dequant_block(v, "int8", 128))
+    q, s = comms.quant_encode(v, 128)
+    assert q.dtype == jnp.int8 and s.shape == (N, 8)
+    np.testing.assert_array_equal(np.asarray(comms.quant_decode(q, s, 128)),
+                                  a)
+    np.testing.assert_array_equal(np.asarray(_quant_block(v, "int8", 128)),
+                                  a)
+    for wd in ("f32", "bf16"):
+        np.testing.assert_array_equal(
+            np.asarray(comms.quant_dequant_block(v, wd, 128)),
+            np.asarray(_quant_block(v, wd, 128)))
+
+
+def test_quant_core_has_single_implementation():
+    """Grep-clean: the per-block scale arithmetic (the `/ 127` max-abs
+    scale) lives ONLY in core/comms.py — no second `_quant_block`-style
+    body anywhere under src/."""
+    src_root = os.path.join(os.path.dirname(__file__), "..", "src")
+    offenders = []
+    for dirpath, _, files in os.walk(src_root):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            text = open(path).read()
+            if "127.0" in text and "jnp.round" in text:
+                offenders.append(os.path.relpath(path, src_root))
+    assert offenders == [os.path.join("repro", "core", "comms.py")], offenders
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.spmd
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
