@@ -25,3 +25,24 @@ def pytest_configure(config):
         "markers",
         "spmd: forced-CPU-mesh subprocess tests (shardable into a parallel "
         "CI job)")
+
+
+def pytest_collection_modifyitems(config, items):
+    # CI runs the suite as two marker shards. Evaluate the exact expressions
+    # the workflow passes and assert they partition the collected suite —
+    # a test matching neither (or both) would silently drop out of CI.
+    # Only meaningful on an unfiltered collection (no -m/-k narrowing).
+    if config.option.markexpr or config.option.keyword:
+        return
+    from _pytest.mark.expression import Expression
+
+    shard_a = Expression.compile("spmd")
+    shard_b = Expression.compile("not spmd")
+    for item in items:
+        names = {m.name for m in item.iter_markers()}
+        in_a = shard_a.evaluate(names.__contains__)
+        in_b = shard_b.evaluate(names.__contains__)
+        assert in_a != in_b, (
+            f"{item.nodeid}: markers {sorted(names)} place the test in "
+            f"{'both CI shards' if in_a else 'neither CI shard'} "
+            "(`-m spmd` / `-m \"not spmd\"`) — fix its markers")

@@ -1,0 +1,29 @@
+"""swarmlint: JAX/SPMD-aware static analysis for this repo.
+
+The framework's correctness now rests on invariants nothing in the type
+system checks: collective axis names must match the declared mesh registry,
+jitted hot paths must donate their buffers, traced code must not sync to the
+host, quantization must have exactly one implementation, SPMD tests must be
+marked for the CI shard split, and Pallas block sizes must go through a
+checked VMEM budget. PRs 3-5 enforced a few of these with ad-hoc grep tests;
+this package turns them into a real AST analysis pass.
+
+Usage::
+
+    python -m repro.analysis.lint src tests          # CI gate (exit 1 on
+                                                     # any unsuppressed
+                                                     # finding)
+    python -m repro.analysis.lint --list-rules
+
+Suppress a finding with ``# noqa: SWLxxx — <justification>`` on the flagged
+line; a suppression without a justification is itself a finding (SWL000).
+
+Pure stdlib on purpose: the linter never imports jax (it must run before any
+backend exists, and must stay cheap enough for a pre-commit hook).
+
+The package body intentionally imports nothing: ``python -m
+repro.analysis.lint`` must not re-execute a module the package already
+pulled in (runpy double-import). Import ``repro.analysis.lint`` /
+``repro.analysis.rules`` directly for the API (``run_paths``, ``RULES``,
+``Finding``).
+"""

@@ -1,0 +1,189 @@
+"""swarmlint driver: file collection, noqa suppression, reporting, CLI.
+
+    python -m repro.analysis.lint src tests
+
+Exit code is 1 when any unsuppressed finding remains, 0 on a clean tree.
+Suppression: ``# noqa: SWL002 — <justification>`` on the flagged line. A
+suppression without a justification (or a blanket ``noqa`` naming no code)
+is reported as SWL000, which cannot itself be suppressed — every silenced
+finding carries its reason in the source.
+
+``tests/lint_fixtures/`` is excluded from directory walks (its files violate
+rules on purpose); passing a fixture file as an explicit path lints it.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.rules import RULES, Finding, LintContext, Module
+
+_EXCLUDED_PARTS = {"__pycache__", ".git", "lint_fixtures", ".bench",
+                   ".pytest_cache"}
+
+_NOQA_RE = re.compile(r"#\s*noqa(?P<colon>\s*:)?(?P<rest>[^#]*)",
+                      re.IGNORECASE)
+_CODES_RE = re.compile(
+    r"^\s*(?P<codes>[A-Za-z]+\d+(?:\s*,\s*[A-Za-z]+\d+)*)(?P<just>.*)$")
+
+_TREAT_AS_RE = re.compile(r"#\s*swarmlint:\s*treat-as=(\S+)")
+
+
+def _repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def _collect_files(paths: Sequence[str], root: Path) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if not path.is_absolute():
+            path = root / path
+        if path.is_file():
+            out.append(path)
+        elif path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not _EXCLUDED_PARTS & set(f.parts):
+                    out.append(f)
+        else:
+            raise FileNotFoundError(f"swarmlint: no such path: {p}")
+    return out
+
+
+def _parse(path: Path, root: Path) -> Tuple[Optional[Module], List[Finding]]:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    try:
+        source = path.read_text()
+    except (OSError, UnicodeDecodeError) as e:
+        return None, [Finding(rel, 1, "SWL000", "error",
+                              f"unreadable source: {e}")]
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return None, [Finding(rel, e.lineno or 1, "SWL000", "error",
+                              f"syntax error: {e.msg}")]
+    effective = rel
+    for line in source.splitlines()[:10]:
+        m = _TREAT_AS_RE.search(line)
+        if m:
+            effective = m.group(1)
+            break
+    return Module(path=rel, rel=effective, source=source, tree=tree,
+                  lines=source.splitlines()), []
+
+
+def _noqa_map(module: Module) -> Tuple[Dict[int, Set[str]], List[Finding]]:
+    """line -> suppressed SWL codes, plus SWL000 hygiene findings."""
+    sup: Dict[int, Set[str]] = {}
+    meta: List[Finding] = []
+    for i, ln in enumerate(module.lines, 1):
+        m = _NOQA_RE.search(ln)
+        if not m:
+            continue
+        if m.group("colon") is None:
+            meta.append(Finding(
+                module.path, i, "SWL000", "error",
+                "blanket noqa comment is not allowed — name the code and "
+                "the reason: '# noqa: SWL002 — <why this is safe>'"))
+            continue
+        cm = _CODES_RE.match(m.group("rest"))
+        if cm is None:
+            continue  # documentation mention / malformed — not a suppression
+        codes = {c.strip().upper() for c in cm.group("codes").split(",")}
+        swl = {c for c in codes if c.startswith("SWL")}
+        if not swl:
+            continue  # some other linter's noqa — not ours to police
+        if not cm.group("just").strip(" -—–:\t"):
+            meta.append(Finding(
+                module.path, i, "SWL000", "error",
+                f"suppression of {'/'.join(sorted(swl))} without a "
+                "justifying comment — say why the finding does not apply"))
+        sup[i] = swl
+    return sup, meta
+
+
+def run_paths(paths: Sequence[str], *, rules: Optional[Sequence[str]] = None,
+              respect_noqa: bool = True,
+              root: Optional[Path] = None) -> List[Finding]:
+    """Lint ``paths`` (files or directories); returns unsuppressed findings.
+
+    ``rules``: optional allowlist of rule ids (e.g. ``["SWL004"]``).
+    """
+    findings, _ = _run(paths, rules=rules, respect_noqa=respect_noqa,
+                       root=root)
+    return findings
+
+
+def _run(paths, *, rules=None, respect_noqa=True, root=None):
+    root = root or _repo_root()
+    modules: List[Module] = []
+    findings: List[Finding] = []
+    for f in _collect_files(paths, root):
+        mod, errs = _parse(f, root)
+        findings.extend(errs)
+        if mod is not None:
+            modules.append(mod)
+
+    ctx = LintContext(modules, root)
+    active = [cls() for cls in RULES
+              if rules is None or cls.id in set(rules)]
+    suppressed = 0
+    for module in modules:
+        sup, meta = _noqa_map(module)
+        if respect_noqa:
+            findings.extend(meta)  # SWL000: never suppressible
+        for r in active:
+            if not r.applies(module):
+                continue
+            for finding in r.check(module, ctx):
+                if respect_noqa and finding.rule in sup.get(finding.line,
+                                                            set()):
+                    suppressed += 1
+                    continue
+                findings.append(finding)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, {"suppressed": suppressed, "files": len(modules)}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="swarmlint: JAX/SPMD-aware static analysis for this repo")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint (default: src tests)")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="SWLxxx",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--no-noqa", action="store_true",
+                    help="ignore noqa comments (report everything)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print("SWL000 [error]   noqa hygiene: suppressions must name a code "
+              "and carry a justification (built into the runner)")
+        for cls in RULES:
+            print(f"{cls.id} [{cls.severity:7s}] {cls.summary}")
+        return 0
+
+    findings, stats = _run(args.paths, rules=args.rules,
+                           respect_noqa=not args.no_noqa)
+    for f in findings:
+        print(f.render())
+    errors = sum(1 for f in findings if f.severity == "error")
+    warnings = len(findings) - errors
+    if findings:
+        print(f"swarmlint: {errors} error(s), {warnings} warning(s) "
+              f"({stats['suppressed']} suppressed) in {stats['files']} files")
+        return 1
+    print(f"swarmlint: clean — {stats['files']} files, "
+          f"{stats['suppressed']} suppressed finding(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

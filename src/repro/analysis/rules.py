@@ -1,0 +1,864 @@
+"""swarmlint rule registry.
+
+Each rule is a class with an ``id`` (``SWL001``...), a ``severity``, a
+one-line ``summary``, and a ``check(module, ctx)`` returning findings. Rules
+are registered with the :func:`rule` decorator; ``lint.py`` drives them.
+
+Everything here works on the stdlib ``ast`` only — no jax import, so the
+linter runs in CI before any backend exists and stays fast enough for a
+pre-commit hook.
+
+Fixture snippets (tests/lint_fixtures/) opt into path-scoped rules with a
+``# swarmlint: treat-as=<repo-relative-path>`` directive in their first
+lines; the runner rewrites the module's *effective* path before rules see
+it, so e.g. a donation fixture can masquerade as ``src/repro/core/engine.py``
+without living there.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import textwrap
+from typing import Dict, List, Optional, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# core types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str          # repo-relative posix path (the REAL file, not treat-as)
+    line: int
+    rule: str          # "SWL001"
+    severity: str      # "error" | "warning"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.severity}] {self.message}"
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file."""
+    path: str          # real repo-relative posix path
+    rel: str           # effective path for rule scoping (treat-as directive)
+    source: str
+    tree: ast.Module
+    lines: List[str]
+
+
+class LintContext:
+    """Shared cross-module state: the module set, and lazily-derived facts
+    (mesh-axis registry, jit callgraph)."""
+
+    def __init__(self, modules: List[Module], repo_root):
+        self.modules = modules
+        self.repo_root = repo_root
+        self._axes: Optional[Tuple[Set[str], Optional[Finding]]] = None
+        self._callgraph = None
+
+    # -- SWL001: the declared axis registry -------------------------------
+    def mesh_axes(self) -> Tuple[Set[str], Optional[Finding]]:
+        """Parse MESH_AXES from launch/mesh.py (never imports it)."""
+        if self._axes is not None:
+            return self._axes
+        rel = "src/repro/launch/mesh.py"
+        src = None
+        for m in self.modules:
+            if m.rel == rel:
+                src = m.tree
+                break
+        if src is None:
+            p = self.repo_root / rel
+            try:
+                src = ast.parse(p.read_text())
+            except OSError:
+                self._axes = (set(), Finding(
+                    rel, 1, "SWL001", "error",
+                    "axis registry source missing: cannot read MESH_AXES"))
+                return self._axes
+        axes: Set[str] = set()
+        err = None
+        for node in ast.walk(src):
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "MESH_AXES"
+                            for t in node.targets)):
+                if isinstance(node.value, (ast.Tuple, ast.List)):
+                    for elt in node.value.elts:
+                        if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                            axes.add(elt.value)
+        if not axes:
+            err = Finding(rel, 1, "SWL001", "error",
+                          "MESH_AXES registry not found in launch/mesh.py "
+                          "(must be a literal tuple of axis-name strings)")
+        self._axes = (axes, err)
+        return self._axes
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+RULES: List[type] = []
+
+
+def rule(cls):
+    RULES.append(cls)
+    return cls
+
+
+class Rule:
+    id = "SWL000"
+    severity = "error"
+    summary = ""
+
+    def applies(self, module: Module) -> bool:
+        return True
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        raise NotImplementedError
+
+
+def _is_test_file(rel: str) -> bool:
+    return rel.rsplit("/", 1)[-1].startswith("test_")
+
+
+def _attr_name(func) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _dotted(node) -> str:
+    """'jax.lax.psum' for an Attribute/Name chain ('' if not a pure chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# SWL001 — collective axis names must come from the declared registry
+# ---------------------------------------------------------------------------
+
+# collective -> index of the axis-name argument
+_COLLECTIVES = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "ppermute": 1,
+    "all_gather": 1, "all_to_all": 1, "psum_scatter": 1,
+    "reduce_scatter": 1, "axis_index": 0,
+}
+_MESH_CTORS = {"make_mesh": 1, "Mesh": 1}  # index of the axis-names tuple
+
+
+@rule
+class CollectiveAxisRule(Rule):
+    id = "SWL001"
+    severity = "error"
+    summary = ("collective / mesh-construction axis names must come from the "
+               "MESH_AXES registry in launch/mesh.py")
+
+    # embedded-code strings (the subprocess-based SPMD tests build their
+    # programs as string literals) get parsed and checked too
+    _EMBED_HINT = re.compile(
+        r"\b(make_mesh|Mesh|psum|ppermute|all_gather|all_to_all|"
+        r"psum_scatter|reduce_scatter|axis_index)\b")
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        axes, err = ctx.mesh_axes()
+        if err is not None:
+            # report the registry problem once, from the registry's own file
+            return [err] if module.rel == err.path else []
+        out: List[Finding] = []
+
+        def bad_axis(expr) -> List[Tuple[int, str]]:
+            """(line, name) for every literal axis name not in the registry."""
+            hits = []
+            if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+                if expr.value not in axes:
+                    hits.append((expr.lineno, expr.value))
+            elif isinstance(expr, (ast.Tuple, ast.List)):
+                for e in expr.elts:
+                    hits.extend(bad_axis(e))
+            return hits
+
+        def check_tree(tree, mapper, origin: str):
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _attr_name(node.func)
+                table = None
+                if name in _COLLECTIVES:
+                    table, kwname = _COLLECTIVES, "axis_name"
+                elif name in _MESH_CTORS:
+                    table, kwname = _MESH_CTORS, "axis_names"
+                if table is None:
+                    continue
+                idx = table[name]
+                cand = None
+                if len(node.args) > idx:
+                    cand = node.args[idx]
+                else:
+                    for kw in node.keywords:
+                        if kw.arg == kwname:
+                            cand = kw.value
+                if cand is None:
+                    continue
+                for line, ax in bad_axis(cand):
+                    out.append(Finding(
+                        module.path, mapper(line), self.id, self.severity,
+                        f"axis name {ax!r} in {name}(...){origin} is not in "
+                        f"the MESH_AXES registry {tuple(sorted(axes))} "
+                        "(launch/mesh.py)"))
+
+        check_tree(module.tree, lambda line: line, "")
+        for node in ast.walk(module.tree):
+            if (isinstance(node, ast.Constant) and isinstance(node.value, str)
+                    and "\n" in node.value
+                    and self._EMBED_HINT.search(node.value)):
+                dedented = textwrap.dedent(node.value)
+                try:
+                    embedded = ast.parse(dedented)
+                except SyntaxError:
+                    continue
+
+                def mapper(line, _emb=dedented.splitlines(), _at=node.lineno):
+                    # map the in-string line back onto the physical line by
+                    # content (backslash continuations inside the string
+                    # break simple offset arithmetic) so a noqa comment in
+                    # the code string suppresses exactly its own finding
+                    txt = (_emb[line - 1].strip()
+                           if 0 < line <= len(_emb) else "")
+                    if txt:
+                        for j in range(_at - 1, len(module.lines)):
+                            if module.lines[j].strip() == txt:
+                                return j + 1
+                    return _at
+
+                check_tree(embedded, mapper, " [embedded code string]")
+
+        # cross-file consistency: the logical->physical table may only map
+        # onto registered mesh axes
+        if module.rel == "src/repro/sharding/rules.py":
+            for node in ast.walk(module.tree):
+                if (isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict)
+                        and any(isinstance(t, ast.Name) and t.id == "DEFAULT_LOGICAL"
+                                for t in node.targets)):
+                    for v in node.value.values:
+                        vals = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+                        for e in vals:
+                            if (isinstance(e, ast.Constant)
+                                    and isinstance(e.value, str)
+                                    and e.value not in axes):
+                                out.append(Finding(
+                                    module.path, e.lineno, self.id, self.severity,
+                                    f"DEFAULT_LOGICAL maps onto mesh axis "
+                                    f"{e.value!r} which is not in MESH_AXES"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SWL002 — no host syncs in code reachable from a jit/shard_map entry point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Fn:
+    module: Module
+    qual: str                 # "SwarmEngine._round" / "ring_all_reduce"
+    name: str
+    cls: Optional[str]
+    node: ast.AST
+    children: Dict[str, "_Fn"] = dataclasses.field(default_factory=dict)
+    is_entry: bool = False
+
+
+# attribute names too generic to resolve on a non-self receiver (dict.update
+# vs EarlyStopper.update would otherwise alias)
+_GENERIC_ATTRS = {
+    "update", "get", "pop", "items", "keys", "values", "append", "extend",
+    "copy", "astype", "reshape", "sum", "mean", "max", "min", "join",
+    "split", "map", "leaves", "flatten", "read", "write", "init", "index",
+    "count", "sort", "item", "tolist", "apply", "lower", "shape", "close",
+}
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "sharding"}
+
+
+def _contains_static_source(expr) -> bool:
+    """True if the expression reads only trace-time-static metadata
+    (shape/dtype arithmetic, len(...), constants)."""
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return True
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "len"):
+            return True
+    return isinstance(expr, ast.Constant)
+
+
+class _CallGraph:
+    """Name-resolution callgraph over the src/repro modules in this run.
+
+    Deliberately approximate: bare names resolve module-locally first, then
+    to a globally unique def; ``self.x()`` resolves inside the enclosing
+    class; other attribute calls resolve only when the method name is
+    globally unique and not a generic container-method name. Function
+    references passed as call *arguments* (vmap/scan/tree.map bodies) count
+    as edges too.
+    """
+
+    def __init__(self, modules: List[Module]):
+        self.fns: List[_Fn] = []
+        self.by_module: Dict[str, Dict[str, _Fn]] = {}
+        self.by_name: Dict[str, List[_Fn]] = {}
+        self.by_cls: Dict[Tuple[str, str], _Fn] = {}
+        self.aliases: Dict[str, Dict[str, str]] = {}
+        for m in modules:
+            if not m.rel.startswith("src/repro") or _is_test_file(m.rel):
+                continue
+            self._collect(m)
+        self._mark_entries()
+        self.reachable: Dict[str, str] = {}  # qual -> entry qual
+        self._propagate()
+
+    # -- collection -------------------------------------------------------
+    def _collect(self, m: Module):
+        top: Dict[str, _Fn] = {}
+        alias: Dict[str, str] = {}
+        self.by_module[m.rel] = top
+        self.aliases[m.rel] = alias
+
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    if a.asname:
+                        alias[a.asname] = a.name
+
+        def visit(body, cls, parent: Optional[_Fn], prefix):
+            for node in body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{m.rel}::{prefix}{node.name}"
+                    fn = _Fn(m, qual, node.name, cls, node)
+                    self.fns.append(fn)
+                    self.by_name.setdefault(node.name, []).append(fn)
+                    if parent is None and cls is None:
+                        top[node.name] = fn
+                    if parent is not None:
+                        parent.children[node.name] = fn
+                    if cls is not None and parent is None:
+                        self.by_cls[(cls, node.name)] = fn
+                    visit(node.body, cls, fn, prefix + node.name + ".")
+                elif isinstance(node, ast.ClassDef):
+                    visit(node.body, node.name, None, prefix + node.name + ".")
+                elif isinstance(node, (ast.If, ast.Try, ast.With)):
+                    visit(ast.iter_child_nodes(node), cls, parent, prefix)
+
+        visit(m.tree.body, None, None, "")
+
+    # -- entry points -----------------------------------------------------
+    def _is_jit_expr(self, expr) -> bool:
+        d = _dotted(expr)
+        return d in ("jax.jit", "jit", "pjit", "jax.pjit")
+
+    def _entry_wrappers(self, call: ast.Call) -> bool:
+        """jax.jit(f) / shard_map(f, ...) / pl.pallas_call(kernel, ...)."""
+        if self._is_jit_expr(call.func):
+            return True
+        name = _attr_name(call.func)
+        return name in ("shard_map", "_shard_map", "pallas_call")
+
+    def _mark_entries(self):
+        for fn in self.fns:
+            node = fn.node
+            for dec in getattr(node, "decorator_list", []):
+                if self._is_jit_expr(dec):
+                    fn.is_entry = True
+                elif (isinstance(dec, ast.Call)
+                      and (_attr_name(dec.func) == "partial"
+                           and dec.args and self._is_jit_expr(dec.args[0])
+                           or self._is_jit_expr(dec.func))):
+                    fn.is_entry = True
+        # call-site wrapping: jax.jit(self._round, ...), shard_map(f, ...)
+        for fn in self.fns:
+            for call in self._calls_in(fn):
+                if not self._entry_wrappers(call) or not call.args:
+                    continue
+                target = self._resolve(call.args[0], fn)
+                if target is not None:
+                    target.is_entry = True
+        # module-level wrapping (round = jax.jit(_round)) — rare here but
+        # cheap to support
+        for m_rel, top in self.by_module.items():
+            mod = next(m for m in self.fns if m.module.rel == m_rel).module \
+                if any(f.module.rel == m_rel for f in self.fns) else None
+            if mod is None:
+                continue
+            for node in ast.walk(mod.tree):
+                if (isinstance(node, ast.Call) and self._entry_wrappers(node)
+                        and node.args):
+                    t = node.args[0]
+                    if isinstance(t, ast.Name) and t.id in top:
+                        top[t.id].is_entry = True
+
+    # -- edges ------------------------------------------------------------
+    def _calls_in(self, fn: _Fn):
+        """Call nodes in fn's own body, not descending into nested defs."""
+        out = []
+
+        def walk(node):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if isinstance(child, ast.Call):
+                    out.append(child)
+                walk(child)
+
+        walk(fn.node)
+        return out
+
+    def _resolve(self, expr, fn: _Fn) -> Optional[_Fn]:
+        if isinstance(expr, ast.Name):
+            name = self.aliases.get(fn.module.rel, {}).get(expr.id, expr.id)
+            if expr.id in fn.children:
+                return fn.children[expr.id]
+            local = self.by_module.get(fn.module.rel, {})
+            if name in local:
+                return local[name]
+            if expr.id in local:
+                return local[expr.id]
+            cands = self.by_name.get(name, [])
+            return cands[0] if len(cands) == 1 else None
+        if isinstance(expr, ast.Attribute):
+            attr = expr.attr
+            if isinstance(expr.value, ast.Name) and expr.value.id == "self":
+                if fn.cls and (fn.cls, attr) in self.by_cls:
+                    return self.by_cls[(fn.cls, attr)]
+            if attr in _GENERIC_ATTRS:
+                return None
+            cands = self.by_name.get(attr, [])
+            return cands[0] if len(cands) == 1 else None
+        return None
+
+    # higher-order caller -> positional slots holding function references.
+    # Only these slots create edges: resolving EVERY Name argument would
+    # alias data variables onto same-named host functions (a scan's xs named
+    # `batches` is not a call to data.synthetic.batches).
+    _HIGHER_ORDER = {
+        "vmap": (0,), "pmap": (0,), "map": (0,), "tree_map": (0,),
+        "scan": (0,), "shard_map": (0,), "_shard_map": (0,),
+        "pallas_call": (0,), "partial": (0,), "grad": (0,),
+        "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
+        "jit": (0,), "custom_vjp": (0,), "while_loop": (0, 1),
+        "fori_loop": (2,), "cond": (1, 2), "switch": (1, 2, 3, 4),
+    }
+
+    def _edges(self, fn: _Fn) -> List[_Fn]:
+        out = []
+        for call in self._calls_in(fn):
+            t = self._resolve(call.func, fn)
+            if t is not None:
+                out.append(t)
+            # function references handed to vmap/scan/tree.map/shard_map etc.
+            slots = self._HIGHER_ORDER.get(_attr_name(call.func) or "", ())
+            for i in slots:
+                if i < len(call.args) and isinstance(
+                        call.args[i], (ast.Name, ast.Attribute)):
+                    t = self._resolve(call.args[i], fn)
+                    if t is not None:
+                        out.append(t)
+        out.extend(fn.children.values())  # nested defs run in fn's trace
+        return out
+
+    def _propagate(self):
+        work = [(f, f.qual) for f in self.fns if f.is_entry]
+        for fn, entry in work:
+            if fn.qual in self.reachable:
+                continue
+            self.reachable[fn.qual] = entry
+        queue = list(work)
+        while queue:
+            fn, entry = queue.pop()
+            for nxt in self._edges(fn):
+                if nxt.qual not in self.reachable:
+                    self.reachable[nxt.qual] = entry
+                    queue.append((nxt, entry))
+
+
+@rule
+class TraceHazardRule(Rule):
+    id = "SWL002"
+    severity = "error"
+    summary = ("no host syncs (int()/float()/.item()/np.*/device_get) in "
+               "functions reachable from a jax.jit / shard_map entry point")
+
+    _NP_DTYPE_ATTRS = {"float32", "float64", "int32", "int64", "int8",
+                       "uint8", "bool_", "dtype", "uint32"}
+
+    def applies(self, module: Module) -> bool:
+        return (module.rel.startswith("src/repro")
+                and not _is_test_file(module.rel))
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        if ctx._callgraph is None:
+            ctx._callgraph = _CallGraph(ctx.modules)
+        cg: _CallGraph = ctx._callgraph
+        out: List[Finding] = []
+        for fn in cg.fns:
+            if fn.module is not module and fn.module.rel != module.rel:
+                continue
+            entry = cg.reachable.get(fn.qual)
+            if entry is None:
+                continue
+            short = fn.qual.split("::")[-1]
+            eshort = entry.split("::")[-1]
+            where = (f"in jit-reachable '{short}'"
+                     + ("" if entry == fn.qual else f" (entry: {eshort})"))
+            for call in cg._calls_in(fn):
+                f = call.func
+                if isinstance(f, ast.Name) and f.id in ("int", "float",
+                                                        "bool", "complex"):
+                    if call.args and _contains_static_source(call.args[0]):
+                        continue
+                    out.append(Finding(
+                        module.path, call.lineno, self.id, "error",
+                        f"host sync {f.id}(...) {where} — forces a device "
+                        "round-trip under trace; keep the value on-device or "
+                        "hoist it out of the jitted path"))
+                elif isinstance(f, ast.Attribute) and f.attr in ("item",
+                                                                 "tolist"):
+                    out.append(Finding(
+                        module.path, call.lineno, self.id, "error",
+                        f".{f.attr}() host sync {where}"))
+                elif _dotted(f) in ("jax.device_get", "jax.block_until_ready"):
+                    out.append(Finding(
+                        module.path, call.lineno, self.id, "error",
+                        f"{_dotted(f)}(...) host sync {where}"))
+                elif (isinstance(f, ast.Attribute)
+                      and isinstance(f.value, ast.Name)
+                      and f.value.id in ("np", "numpy")
+                      and f.attr not in self._NP_DTYPE_ATTRS):
+                    out.append(Finding(
+                        module.path, call.lineno, self.id, "warning",
+                        f"host numpy call np.{f.attr}(...) {where} — runs at "
+                        "trace time; fine only for trace-static data (then "
+                        "suppress with a justification) — otherwise use jnp"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SWL003 — hot jitted round entry points must donate their buffers
+# ---------------------------------------------------------------------------
+
+_HOT_ENTRY_RE = re.compile(r"(^|_)(round|rounds|local)(_|$|s$)")
+_DONATE_KWS = {"donate_argnums", "donate_argnames"}
+
+
+@rule
+class DonationRule(Rule):
+    id = "SWL003"
+    severity = "error"
+    summary = ("jitted round/run_rounds-class entry points in core/engine.py "
+               "and core/session.py must declare donate_argnums")
+
+    _TARGETS = ("src/repro/core/engine.py", "src/repro/core/session.py")
+
+    def applies(self, module: Module) -> bool:
+        return module.rel in self._TARGETS
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        out: List[Finding] = []
+
+        def hot(name: Optional[str]) -> bool:
+            return bool(name) and bool(_HOT_ENTRY_RE.search(name))
+
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call) and _dotted(node.func) in (
+                    "jax.jit", "jit"):
+                if not node.args:
+                    continue
+                tname = _attr_name(node.args[0])
+                if hot(tname) and not any(k.arg in _DONATE_KWS
+                                          for k in node.keywords):
+                    out.append(Finding(
+                        module.path, node.lineno, self.id, self.severity,
+                        f"jax.jit({tname}) is a round-class hot path but "
+                        "declares no donate_argnums — params/opt-state "
+                        "buffers will be copied every round"))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    donated = False
+                    is_jit = _dotted(dec) in ("jax.jit", "jit")
+                    if (isinstance(dec, ast.Call)
+                            and _attr_name(dec.func) == "partial"
+                            and dec.args
+                            and _dotted(dec.args[0]) in ("jax.jit", "jit")):
+                        is_jit = True
+                        donated = any(k.arg in _DONATE_KWS
+                                      for k in dec.keywords)
+                    elif isinstance(dec, ast.Call) and _dotted(dec.func) in (
+                            "jax.jit", "jit"):
+                        is_jit = True
+                        donated = any(k.arg in _DONATE_KWS
+                                      for k in dec.keywords)
+                    if is_jit and hot(node.name) and not donated:
+                        out.append(Finding(
+                            module.path, node.lineno, self.id, self.severity,
+                            f"@jit on round-class '{node.name}' without "
+                            "donate_argnums"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SWL004 — declared shared cores must have exactly one implementation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SoleImpl:
+    """Declarative single-implementation contract.
+
+    A scope (function/method or module toplevel) *implements* the core when
+    it contains every listed signature element. Elements:
+      ``constant:<value>``  — a numeric literal (e.g. the 127.0 q8 scale)
+      ``call:<name>``       — a call whose terminal name matches
+    """
+    name: str
+    allowed: str                 # the one repo-relative path allowed to host it
+    signature: Tuple[str, ...]
+    description: str
+
+
+# the next shared core (hierarchical comms reducer, serve decode path) gets
+# the same guarantee by appending one entry here
+SOLE_IMPLS: Tuple[SoleImpl, ...] = (
+    SoleImpl(
+        name="quant_dequant_block",
+        allowed="src/repro/core/comms.py",
+        signature=("constant:127.0", "call:round"),
+        description="int8 block-quantization core (scale-to-127 + round)"),
+)
+
+
+@rule
+class SoleImplementationRule(Rule):
+    id = "SWL004"
+    severity = "error"
+    summary = ("declared shared cores (sole_impl registry) may have exactly "
+               "one implementation site")
+
+    def applies(self, module: Module) -> bool:
+        return (module.rel.startswith("src/")
+                and not _is_test_file(module.rel))
+
+    @staticmethod
+    def _matches(scope_nodes, spec: SoleImpl) -> bool:
+        need_const: Set[float] = set()
+        need_call: Set[str] = set()
+        for sig in spec.signature:
+            kind, _, val = sig.partition(":")
+            if kind == "constant":
+                need_const.add(float(val))
+            elif kind == "call":
+                need_call.add(val)
+        found_const: Set[float] = set()
+        found_call: Set[str] = set()
+        for n in scope_nodes:
+            if (isinstance(n, ast.Constant)
+                    and isinstance(n.value, (int, float))
+                    and float(n.value) in need_const):
+                found_const.add(float(n.value))
+            if isinstance(n, ast.Call):
+                name = _attr_name(n.func)
+                if name in need_call:
+                    found_call.add(name)
+        return found_const == need_const and found_call == need_call
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        out: List[Finding] = []
+        scopes: List[Tuple[str, int, list]] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append((node.name, node.lineno, list(ast.walk(node))))
+        for spec in SOLE_IMPLS:
+            if module.rel == spec.allowed:
+                continue
+            for name, line, nodes in scopes:
+                if self._matches(nodes, spec):
+                    out.append(Finding(
+                        module.path, line, self.id, self.severity,
+                        f"'{name}' re-implements sole-impl core "
+                        f"'{spec.name}' ({spec.description}); the only "
+                        f"allowed implementation lives in {spec.allowed} — "
+                        "delegate to it instead"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SWL005 — mesh-touching tests must carry the spmd pytest marker
+# ---------------------------------------------------------------------------
+
+_SPMD_TOKENS = {"Mesh", "shard_map", "make_mesh", "make_swarm_mesh",
+                "make_production_mesh", "ppermute", "init_mesh_wire"}
+# the subprocess-based SPMD tests hold their mesh code in string literals;
+# \b keeps schedule names like "ring_ppermute" from matching
+_SPMD_STR_RE = re.compile(
+    r"\b(Mesh|shard_map|make_mesh|make_swarm_mesh|make_production_mesh|"
+    r"init_mesh_wire|ppermute)\b")
+
+
+def _idents(node) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def _string_tokens(node) -> Set[str]:
+    """SPMD tokens inside string literals, excluding the docstring (prose
+    *describing* ppermute behavior is not mesh-touching code)."""
+    doc = None
+    body = getattr(node, "body", None)
+    if (body and isinstance(body[0], ast.Expr)
+            and isinstance(body[0].value, ast.Constant)
+            and isinstance(body[0].value.value, str)):
+        doc = body[0].value
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if (n is not doc and isinstance(n, ast.Constant)
+                and isinstance(n.value, str)):
+            out |= set(_SPMD_STR_RE.findall(n.value))
+    return out
+
+
+@rule
+class SpmdMarkerRule(Rule):
+    id = "SWL005"
+    severity = "error"
+    summary = ("tests touching Mesh/shard_map/ppermute must carry the spmd "
+               "pytest marker (the CI shard split depends on it)")
+
+    def applies(self, module: Module) -> bool:
+        return module.rel.startswith("tests/") and _is_test_file(module.rel)
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        # module-level pytestmark covers every test in the file
+        for node in module.tree.body:
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "pytestmark"
+                            for t in node.targets)
+                    and "spmd" in _idents(node.value)):
+                return []
+
+        # helper closure: non-test module functions that touch the mesh
+        helpers: Dict[str, Set[str]] = {}
+        touching: Set[str] = set()
+        for node in module.tree.body:
+            if (isinstance(node, ast.FunctionDef)
+                    and not node.name.startswith("test_")):
+                ids = _idents(node)
+                helpers[node.name] = ids
+                if (ids & _SPMD_TOKENS) or _string_tokens(node):
+                    touching.add(node.name)
+        changed = True
+        while changed:  # transitive within the module
+            changed = False
+            for name, ids in helpers.items():
+                if name not in touching and ids & touching:
+                    touching.add(name)
+                    changed = True
+
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name.startswith("test_")):
+                continue
+            marked = any("spmd" in _idents(d) for d in node.decorator_list)
+            if marked:
+                continue
+            ids = _idents(node)
+            hit = ((ids & _SPMD_TOKENS) or (ids & touching)
+                   or _string_tokens(node))
+            if hit:
+                out.append(Finding(
+                    module.path, node.lineno, self.id, self.severity,
+                    f"'{node.name}' touches the mesh ({sorted(hit)[0]}) but "
+                    "has no @pytest.mark.spmd marker — it would silently "
+                    "land in the wrong CI shard"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SWL006 — Pallas block sizes must go through auto_block / a checked expr
+# ---------------------------------------------------------------------------
+
+_TILE_PARAM_RE = re.compile(r"^(block|chunk|b[qkmn])$")
+_CHECK_FNS = {"min", "max", "auto_block"}
+
+
+@rule
+class PallasBlockRule(Rule):
+    id = "SWL006"
+    severity = "error"
+    summary = ("kernels/: BlockSpec/VMEM shapes must not use bare int "
+               "literals, and tile-size parameters must be bounded via "
+               "auto_block/min or a divisibility check")
+
+    def applies(self, module: Module) -> bool:
+        return module.rel.startswith("src/repro/kernels/")
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                name = _attr_name(node.func)
+                if name in ("BlockSpec", "VMEM") and node.args:
+                    shape = node.args[0]
+                    if isinstance(shape, (ast.Tuple, ast.List)):
+                        for elt in shape.elts:
+                            if (isinstance(elt, ast.Constant)
+                                    and isinstance(elt.value, int)
+                                    and elt.value > 1):
+                                out.append(Finding(
+                                    module.path, elt.lineno, self.id,
+                                    self.severity,
+                                    f"bare literal {elt.value} in {name} "
+                                    "shape — size blocks via auto_block(...) "
+                                    "or a checked budget expression (the "
+                                    "N=64 VMEM overflow class of bug)"))
+            elif isinstance(node, ast.FunctionDef):
+                body_calls = [_attr_name(c.func) for c in ast.walk(node)
+                              if isinstance(c, ast.Call)]
+                if "pallas_call" not in body_calls:
+                    continue
+                checked: Set[str] = set()
+                for n in ast.walk(node):
+                    if isinstance(n, ast.Assign):
+                        names = _idents(n.value)
+                        if names & _CHECK_FNS:
+                            for t in n.targets:
+                                checked |= {x.id for x in ast.walk(t)
+                                            if isinstance(x, ast.Name)}
+                    if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod):
+                        checked |= {x.id for x in ast.walk(n)
+                                    if isinstance(x, ast.Name)}
+                args = node.args
+                for a in args.args + args.kwonlyargs:
+                    if (_TILE_PARAM_RE.match(a.arg)
+                            and a.arg not in checked):
+                        out.append(Finding(
+                            module.path, node.lineno, self.id, self.severity,
+                            f"tile parameter '{a.arg}' of '{node.name}' is "
+                            "used unchecked — rebind it through "
+                            "auto_block/min or validate divisibility before "
+                            "the pallas_call"))
+        return out

@@ -427,8 +427,9 @@ class SwarmEngine:
             wire = self._auto_wire(stacked, None)
         # merge="mean" averages uniformly (host W is uniform); only fedavg
         # folds dataset sizes into the psum weights
-        sizes = (self.data_sizes if cfg.merge == "fedavg"
-                 else np.ones(cfg.n_nodes))
+        sizes = (jnp.asarray(self.data_sizes, jnp.float32)
+                 if cfg.merge == "fedavg"
+                 else jnp.ones(cfg.n_nodes, jnp.float32))
         weights = sizes / sizes.sum()
         if cfg.lora_only:
             payload, base = split_adapters(stacked)

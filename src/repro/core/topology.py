@@ -49,7 +49,7 @@ def ring_matrix(n: int, self_weight: float = 0.5) -> np.ndarray:
     if not 0.0 < self_weight <= 1.0:
         raise ValueError("self_weight in (0,1]")
     side = (1.0 - self_weight) / 2.0
-    W = np.zeros((n, n))
+    W = np.zeros((n, n))  # noqa: SWL002 — n is a static python int; builds a trace-time constant consumed via jnp.asarray (mixing_matrix_traced)
     for i in range(n):
         W[i, i] = self_weight
         W[i, (i - 1) % n] += side

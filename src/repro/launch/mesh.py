@@ -15,6 +15,13 @@ from __future__ import annotations
 
 import numpy as np
 
+# The single declared mesh-axis registry. Every axis name that appears in a
+# collective call site or mesh construction anywhere in the repo must come
+# from this tuple — `repro.analysis` (swarmlint SWL001) parses this constant
+# at lint time and flags literal drift, so adding a new physical axis means
+# adding it HERE first.
+MESH_AXES = ("pod", "node", "data", "model")
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     import jax

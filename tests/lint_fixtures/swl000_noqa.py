@@ -1,0 +1,20 @@
+"""SWL000 fixture: noqa suppression hygiene.
+
+A justified ``noqa: SWLxxx — why`` comment silences its finding; a
+suppression without a justification, or a blanket ``noqa`` naming no code,
+is itself an (unsuppressible) SWL000 finding. With respect_noqa=False both psum lines
+report their raw SWL001 findings and no SWL000 is emitted.
+"""
+import jax
+
+
+def justified_suppression(x):
+    return jax.lax.psum(x, "offgrid")  # noqa: SWL001 — fixture: a justified suppression is honored
+
+
+def unjustified_suppression(x):
+    return jax.lax.psum(x, "offgrid")  # noqa: SWL001  # LINT-EXPECT: SWL000
+
+
+def blanket_noqa(x):
+    return x  # noqa  # LINT-EXPECT: SWL000

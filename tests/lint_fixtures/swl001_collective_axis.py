@@ -1,0 +1,49 @@
+"""SWL001 fixture: literal axis names that drift off the MESH_AXES registry.
+
+Intentionally violating — tests/test_lint.py asserts the exact finding set
+declared by the `LINT-EXPECT` markers, so marked lines prove true positives
+and every unmarked line proves a true negative. The lint_fixtures/ directory
+is excluded from normal directory walks; fixtures are linted only when
+passed as explicit paths.
+"""
+import jax
+
+
+def bad_psum(x):
+    return jax.lax.psum(x, "nodes")  # LINT-EXPECT: SWL001
+
+
+def good_psum(x):
+    return jax.lax.psum(x, "node")
+
+
+def bad_ppermute(x, perm):
+    return jax.lax.ppermute(x, "swarm", perm)  # LINT-EXPECT: SWL001
+
+
+def bad_mesh():
+    return jax.make_mesh((4,), ("hospitals",))  # LINT-EXPECT: SWL001
+
+
+def good_mesh_kwarg():
+    return jax.make_mesh((2, 2), axis_names=("data", "model"))
+
+
+def bad_axis_index():
+    return jax.lax.axis_index("replica")  # LINT-EXPECT: SWL001
+
+
+def dynamic_axis_ok(x, axis):
+    # a runtime axis variable is not a literal — out of scope by design
+    return jax.lax.psum(x, axis)
+
+
+def bad_embedded_subprocess_style():
+    # the subprocess-based SPMD tests build their programs as code strings;
+    # SWL001 parses those too and maps findings back onto physical lines
+    code = """
+import jax
+mesh = jax.make_mesh((2,), ("clinic",))  # LINT-EXPECT: SWL001
+x = jax.lax.psum(1.0, "data")
+"""
+    return code

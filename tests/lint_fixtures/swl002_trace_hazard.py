@@ -1,0 +1,44 @@
+# swarmlint: treat-as=src/repro/fixture_swl002.py
+"""SWL002 fixture: host syncs reachable from jit/shard_map entry points.
+
+The treat-as directive makes this file count as library code under
+src/repro/ so the callgraph-scoped rule applies. Marked lines are the
+expected findings; everything else (shape math, never-traced host helpers)
+must stay clean.
+"""
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+
+def _helper(x):
+    return float(x.mean())  # LINT-EXPECT: SWL002
+
+
+def _static_math(x):
+    # shape arithmetic is trace-static: float() here is fine
+    return float(x.shape[0] * x.shape[1])
+
+
+@jax.jit
+def entry(x):
+    y = _helper(x)
+    z = _static_math(x)
+    host = np.tanh(3.0)  # LINT-EXPECT: SWL002
+    s = x.sum().item()  # LINT-EXPECT: SWL002
+    return x * y + z + host + s
+
+
+def _shard_body(x):
+    return jax.device_get(x)  # LINT-EXPECT: SWL002
+
+
+def launch(x, mesh):
+    # call-site wrapping also creates an entry point
+    f = shard_map(_shard_body, mesh=mesh, in_specs=None, out_specs=None)
+    return f(x)
+
+
+def never_traced(x):
+    # unreachable from any entry: host-side analysis code may sync freely
+    return float(np.asarray(x).mean())

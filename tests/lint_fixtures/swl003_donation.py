@@ -1,0 +1,38 @@
+# swarmlint: treat-as=src/repro/core/engine.py
+"""SWL003 fixture: round-class jit entry points missing buffer donation.
+
+Masquerades as core/engine.py (the rule is scoped to the two engine files).
+Round-class names (round/rounds/local) jitted without donate_argnums copy
+params/opt-state every round; marked lines are the expected findings.
+"""
+import functools
+
+import jax
+
+
+class FixtureEngine:
+    def _round(self, params, opt_state, batch):
+        return params, opt_state
+
+    def _gate(self, x):
+        return x
+
+    def __init__(self):
+        self.round = jax.jit(self._round)  # LINT-EXPECT: SWL003
+        self.round_ok = jax.jit(self._round, donate_argnums=(0, 1))
+        self.gate = jax.jit(self._gate)  # not round-class: allowed
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def run_rounds(params, n):  # LINT-EXPECT: SWL003
+    return params
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def run_local(params):
+    return params
+
+
+@jax.jit
+def round_step(params):  # LINT-EXPECT: SWL003
+    return params

@@ -1,0 +1,25 @@
+# swarmlint: treat-as=src/repro/fixture_swl004.py
+"""SWL004 fixture: a rogue second implementation of the q8 quant core.
+
+The sole_impl registry declares that the int8 block-quantization core
+(127.0 scale constant + round()) lives only in core/comms.py; any other
+scope containing the full signature is a finding. Partial matches (round
+without the scale, the scale without round) must stay clean.
+"""
+import jax.numpy as jnp
+
+
+def rogue_quant(v):  # LINT-EXPECT: SWL004
+    scale = jnp.max(jnp.abs(v)) / 127.0
+    q = jnp.round(v / scale).astype(jnp.int8)
+    return q, scale
+
+
+def unrelated_round(v):
+    # rounding without the 127 scale constant is not the quant core
+    return jnp.round(v)
+
+
+def unrelated_scale(v):
+    # the scale constant without round() is not the quant core either
+    return v / 127.0

@@ -1,0 +1,41 @@
+# swarmlint: treat-as=tests/test_swl005_fixture.py
+"""SWL005 fixture: mesh-touching tests without the spmd CI-shard marker.
+
+Masquerades as a tests/test_*.py file. CI shards the suite on the spmd
+marker; an unmarked mesh-touching test lands in the wrong shard. Direct
+mesh use, helper-transitive use, and mesh code inside subprocess strings
+must all be caught; docstring prose mentioning ppermute must not.
+"""
+import jax
+import pytest
+
+
+def _mesh_helper():
+    return jax.make_mesh((1,), ("node",))
+
+
+def test_direct_mesh_unmarked():  # LINT-EXPECT: SWL005
+    mesh = jax.make_mesh((1,), ("node",))
+    assert mesh is not None
+
+
+def test_helper_mesh_unmarked():  # LINT-EXPECT: SWL005
+    assert _mesh_helper() is not None
+
+
+@pytest.mark.spmd
+def test_mesh_marked():
+    assert jax.make_mesh((1,), ("node",)) is not None
+
+
+def test_subprocess_string_unmarked():  # LINT-EXPECT: SWL005
+    code = """
+import jax
+mesh = jax.make_mesh((2,), ("node",))
+"""
+    assert "shard" not in code
+
+
+def test_docstring_mention_is_fine():
+    """Prose describing ppermute schedules is not mesh-touching code."""
+    assert True

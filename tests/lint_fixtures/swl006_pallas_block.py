@@ -1,0 +1,52 @@
+# swarmlint: treat-as=src/repro/kernels/fixture_swl006.py
+"""SWL006 fixture: bare-literal Pallas block shapes / unchecked tile params.
+
+Masquerades as a kernels/ module. A bare int literal in a BlockSpec/VMEM
+shape is the N=64 VMEM-overflow class of bug; a tile-size parameter that
+reaches pallas_call without going through auto_block/min or a divisibility
+check is the same hazard one call earlier.
+"""
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_literal_blocks(x):
+    n = x.shape[0]
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=x,
+        in_specs=[pl.BlockSpec((n, 16384), lambda i: (0, i))],  # LINT-EXPECT: SWL006
+        out_specs=pl.BlockSpec((n, 8192), lambda i: (0, i)),  # LINT-EXPECT: SWL006
+    )(x)
+
+
+def bad_unchecked_tile(x, block=4096):  # LINT-EXPECT: SWL006
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=x,
+        in_specs=[pl.BlockSpec((x.shape[0], block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((x.shape[0], block), lambda i: (0, i)),
+    )(x)
+
+
+def good_bounded_tile(x, block=4096):
+    block = min(block, x.shape[1])
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=x,
+        in_specs=[pl.BlockSpec((x.shape[0], block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((x.shape[0], block), lambda i: (0, i)),
+    )(x)
+
+
+def good_divisibility_checked(x, chunk=512):
+    assert x.shape[1] % chunk == 0
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=x,
+        in_specs=[pl.BlockSpec((x.shape[0], chunk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((x.shape[0], chunk), lambda i: (0, i)),
+    )(x)

@@ -265,20 +265,13 @@ def test_quant_encode_decode_bit_identical_to_round_trip():
 
 
 def test_quant_core_has_single_implementation():
-    """Grep-clean: the per-block scale arithmetic (the `/ 127` max-abs
-    scale) lives ONLY in core/comms.py — no second `_quant_block`-style
-    body anywhere under src/."""
-    src_root = os.path.join(os.path.dirname(__file__), "..", "src")
-    offenders = []
-    for dirpath, _, files in os.walk(src_root):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            text = open(path).read()
-            if "127.0" in text and "jnp.round" in text:
-                offenders.append(os.path.relpath(path, src_root))
-    assert offenders == [os.path.join("repro", "core", "comms.py")], offenders
+    """The per-block scale arithmetic (the `/ 127` max-abs scale + round)
+    lives ONLY in core/comms.py. Enforced by swarmlint's declarative
+    sole_impl registry (SWL004) — any second implementation site under src/
+    is a finding."""
+    from repro.analysis.lint import run_paths
+    findings = run_paths(["src"], rules=["SWL004"])
+    assert findings == [], "\n".join(f.render() for f in findings)
 
 
 # ---------------------------------------------------------------------------

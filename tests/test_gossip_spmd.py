@@ -124,7 +124,7 @@ print("OK ring_rows")
 # --- gradmatch via the engine gossip backend == host gradmatch merge -----
 from repro.core.engine import SwarmEngine
 from repro.core.merge_impl import gradmatch_merge
-gm_mesh = jax.make_mesh((4,), ("gnode",), devices=jax.devices()[:4])
+gm_mesh = jax.make_mesh((4,), ("gnode",), devices=jax.devices()[:4])  # noqa: SWL001 — off-registry on purpose: the engine's gossip backend must be axis-name-agnostic (axis is a parameter, never hardcoded)
 sizes = [1.0, 3.0, 3.0, 3.0]
 gcfg = SwarmConfig(n_nodes=4, topology="full", merge="gradmatch",
                    lora_only=False)

@@ -44,6 +44,7 @@ def test_parser_tuple_result_and_async():
     assert cb["count"] == 2
 
 
+@pytest.mark.spmd
 def test_parser_on_real_compiled_module():
     """An actual psum lowering must be visible to the parser."""
     import subprocess, sys, os, textwrap
@@ -52,9 +53,9 @@ def test_parser_on_real_compiled_module():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_stats import collective_bytes
-        mesh = jax.make_mesh((4,), ("d",), devices=jax.devices()[:4])
+        mesh = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
         x = jax.ShapeDtypeStruct((16, 8), jnp.float32,
-                                 sharding=NamedSharding(mesh, P("d")))
+                                 sharding=NamedSharding(mesh, P("data")))
         c = jax.jit(lambda a: a.sum(0, keepdims=True) * 1.0 +
                     jax.lax.with_sharding_constraint(
                         a, NamedSharding(mesh, P())).mean()).lower(x).compile()
@@ -120,6 +121,7 @@ def test_smoke_variants_within_limits():
 # sharding rules
 # ---------------------------------------------------------------------------
 
+@pytest.mark.spmd
 def test_param_specs_divisibility_fallback():
     import subprocess, sys, os, textwrap
     src = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -1,0 +1,91 @@
+"""swarmlint self-tests: per-rule fixture corpora, suppression behavior, and
+the repo-wide clean-run gate.
+
+Each file under tests/lint_fixtures/ is an intentionally-violating snippet;
+its ``LINT-EXPECT: SWLxxx`` markers declare the exact expected finding set.
+Asserting set equality proves both directions at once: every marked line is
+a fixture-proven true positive, and every unmarked line (the good_* /
+*_ok variants sitting next to the violations) is a true negative.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import main, run_paths
+from repro.analysis.rules import RULES
+
+FIXTURES = Path(__file__).parent / "lint_fixtures"
+_EXPECT_RE = re.compile(r"LINT-EXPECT:\s*(SWL\d+)")
+_FIXTURE_FILES = sorted(p.name for p in FIXTURES.glob("swl*.py"))
+
+
+def _expected(path: Path):
+    want = set()
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        for code in _EXPECT_RE.findall(line):
+            want.add((i, code))
+    return want
+
+
+@pytest.mark.parametrize("name", _FIXTURE_FILES)
+def test_fixture_findings_match_markers(name):
+    path = FIXTURES / name
+    want = _expected(path)
+    assert want, f"{name} declares no LINT-EXPECT markers"
+    findings = run_paths([str(path)])
+    got = {(f.line, f.rule) for f in findings}
+    assert got == want, (
+        f"{name}: expected {sorted(want)}, got:\n"
+        + "\n".join(f.render() for f in findings))
+
+
+def test_every_rule_has_a_fixture_true_positive():
+    covered = set()
+    for name in _FIXTURE_FILES:
+        covered |= {code for _, code in _expected(FIXTURES / name)}
+    assert {cls.id for cls in RULES} <= covered, covered
+    assert "SWL000" in covered  # the runner's own hygiene rule
+
+
+def test_trace_hazard_severity_split():
+    """Value-forcing conversions are errors; trace-time numpy (legitimate on
+    static data, then suppressed with a reason) is a warning."""
+    path = FIXTURES / "swl002_trace_hazard.py"
+    sev = {f.line: f.severity for f in run_paths([str(path)])}
+    lines = path.read_text().splitlines()
+    np_line = next(i for i, l in enumerate(lines, 1) if "np.tanh" in l)
+    float_line = next(i for i, l in enumerate(lines, 1) if "float(x.mean" in l)
+    assert sev[np_line] == "warning"
+    assert sev[float_line] == "error"
+
+
+def test_noqa_raw_mode_reports_suppressed_findings():
+    """respect_noqa=False surfaces everything a suppression hides (and emits
+    no hygiene findings — there is nothing being suppressed)."""
+    path = FIXTURES / "swl000_noqa.py"
+    raw = run_paths([str(path)], respect_noqa=False)
+    psum_lines = [i for i, l in enumerate(path.read_text().splitlines(), 1)
+                  if '"offgrid"' in l]
+    assert len(psum_lines) == 2
+    assert [f.line for f in raw if f.rule == "SWL001"] == psum_lines
+    assert not [f for f in raw if f.rule == "SWL000"]
+
+
+def test_rule_allowlist_filters():
+    path = FIXTURES / "swl001_collective_axis.py"
+    assert run_paths([str(path)], rules=["SWL006"]) == []
+    only = run_paths([str(path)], rules=["SWL001"])
+    assert only and all(f.rule == "SWL001" for f in only)
+
+
+def test_cli_exit_codes(capsys):
+    assert main([str(FIXTURES / "swl001_collective_axis.py")]) == 1
+    assert main(["--list-rules"]) == 0
+    capsys.readouterr()  # swallow the CLI output
+
+
+def test_repo_src_and_tests_are_lint_clean():
+    """The CI gate: the committed tree carries zero unsuppressed findings."""
+    findings = run_paths(["src", "tests"])
+    assert findings == [], "\n".join(f.render() for f in findings)
