@@ -33,6 +33,11 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
                     their f32 forms on a forced CPU mesh (subprocess) —
                     settled-parity diff, wall time, HLO-measured collective
                     bytes (the ~4x shrink)
+  hier_sync         hierarchical pod-delegate q8 schedule vs the flat ring
+                    q8 on a forced-CPU 2x2 ("pod", "node") mesh
+                    (subprocess): wall time + HLO-measured bytes split per
+                    link class (intra-pod vs cross-pod) next to the cost
+                    model's per-class prediction
 
 ``--smoke`` runs a seconds-scale subset (tiny shapes, no cached experiment
 protocol) so CI can exercise every benchmark entry point; a tier-1 test
@@ -517,11 +522,18 @@ def swarm_sync(smoke: bool = False):
 
         us = _time_us(once, reps=reps)
         s = sess.sync_schedule
+        link = sess.predicted_link_bytes
         rows.append(dict(
             schedule=s.name, collective=s.collective, topology=topo,
             merge=merge, wire_dtype=wd, n_nodes=n,
+            # engine-backend sessions simulate a flat 1-D swarm mesh; the
+            # per-link-class split keys every row the same way the two-level
+            # hier_sync rows are keyed (cross is 0 on a flat mesh)
+            mesh_shape=[n],
             payload_params=sess.payload_params,
             predicted_bytes_per_sync=sess.predicted_sync_bytes,
+            predicted_intra_bytes=link["intra"],
+            predicted_cross_bytes=link["cross"],
             wall_us_per_round=us, simulated=s.simulated))
         print(f"swarm_sync_{topo}_{merge}_{wd},{us:.1f},"
               f"sched={s.name};bytes={sess.predicted_sync_bytes:.0f}")
@@ -690,6 +702,115 @@ def mesh_wire_smoke():
     mesh_wire(smoke=True)
 
 
+def _hier_sync_inner(k: int, m: int, d: int, reps: int):
+    """Runs inside the forced-device-count subprocess: the hierarchical
+    pod-delegate q8 schedule vs the flat ring q8 over the joint axis on a
+    (k pods, m nodes/pod) two-level mesh — wall time plus HLO-measured
+    collective bytes split per link class (`hlo_stats.
+    collective_bytes_by_link`), next to the cost model's per-class
+    prediction."""
+    import json as json_mod
+    from repro.configs.base import SwarmConfig
+    from repro.core import comms, gossip
+    from repro.core.topology import ring_matrix
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_two_level_swarm_mesh
+
+    n = k * m
+    assert jax.device_count() >= n, "inner bench needs the forced device count"
+    mesh, axis = make_two_level_swarm_mesh(k, m)
+    wb = 128
+    rng = np.random.default_rng(0)
+    x = {"w": jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)}
+    wv = jnp.full((n,), 1.0 / n, jnp.float32)
+    Wp = jnp.asarray(ring_matrix(k, 0.5), jnp.float32)
+    Wn = jnp.asarray(ring_matrix(n, 0.5), jnp.float32)
+    pod_of = hlo_stats.pod_device_map(k, m)
+
+    def predicted(cross_pod_cost):
+        cfg = SwarmConfig(n_nodes=n, topology="ring", merge="fedavg",
+                          lora_only=False, wire_dtype="int8", wire_block=wb,
+                          cross_pod_cost=cross_pod_cost)
+        return comms.pick_schedule(cfg, mesh_shape=(k, m))
+
+    hier_sched = predicted(10.0)      # dominant DCN cost -> hierarchical
+    flat_sched = predicted(1.0)       # neutral costs -> flat ring
+    assert hier_sched.name == "hier_fedavg_ring_q8", hier_sched.name
+    assert flat_sched.name == "ring_ppermute", flat_sched.name
+
+    hw0 = gossip.init_mesh_wire("hier_fedavg_ring_q8", x, n_shards=n,
+                                wire_block=wb, mesh_shape=(k, m))
+    fw0 = gossip.init_mesh_wire("ring_ppermute", x, n_shards=n, wire_block=wb)
+    cases = [
+        ("hier_fedavg_ring_q8", hier_sched, hw0, jax.jit(
+            lambda t, w: gossip.hier_fedavg_ring_q8(
+                t, wv, Wp, w, mesh, axis, wire_block=wb))),
+        ("flat_ring_q8", flat_sched, fw0, jax.jit(
+            lambda t, w: gossip.ring_rows_gossip_q8(
+                t, Wn, w, mesh, axis, wire_block=wb))),
+    ]
+    rows = []
+    for name, sched, w0_, fn in cases:
+        us = _time_us(lambda fn=fn, w0_=w0_: fn(x, w0_)[0]["w"], reps=reps)
+        link = hlo_stats.collective_bytes_by_link(
+            fn.lower(x, w0_).compile().as_text(), pod_of)
+        pred = sched.bytes_by_link_class(d)
+        rows.append(dict(
+            schedule=sched.name, collective=sched.collective,
+            topology="ring", merge="fedavg", wire_dtype="int8", n_nodes=n,
+            mesh_shape=[k, m], payload_params=d,
+            predicted_intra_bytes=pred["intra"],
+            predicted_cross_bytes=pred["cross"],
+            measured_intra_bytes=link["intra"],
+            measured_cross_bytes=link["cross"],
+            wall_us_per_round=us))
+        print(f"hier_sync_{name}_us,{us:.1f},k={k};m={m};d={d};wb={wb}")
+        print(f"hier_sync_{name}_intra_bytes,0,{link['intra']}")
+        print(f"hier_sync_{name}_cross_bytes,0,{link['cross']}")
+    ratio = rows[0]["measured_cross_bytes"] / rows[1]["measured_cross_bytes"]
+    print(f"hier_sync_cross_bytes_ratio,0,{ratio:.3f}")
+    print("hier_sync_rows_json,0," + json_mod.dumps(rows))
+
+
+def hier_sync(smoke: bool = False):
+    """Hierarchical two-level comms (ISSUE 7): forced-CPU 2x2 ("pod",
+    "node") mesh subprocess comparing the pod-delegate q8 schedule against
+    the flat ring q8 per link class; rows (intra- vs cross-pod bytes,
+    predicted and HLO-measured) land in BENCH_swarm_sync.json (committed on
+    full runs, scratch on --smoke)."""
+    import subprocess
+    import sys
+    k, m, d, reps = (2, 2, 1 << 12, 3) if smoke else (2, 2, 1 << 16, 10)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={k * m}").strip()
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--inner-hier-sync", f"{k},{m},{d},{reps}"],
+        capture_output=True, text=True, env=env, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"hier sync subprocess failed: "
+                           f"{out.stderr[-800:]}")
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("hier_sync_rows_json,"):
+            rows = json.loads(line.split(",", 2)[2])
+        elif line:
+            print(line)
+    if not rows:
+        raise RuntimeError("hier sync subprocess emitted no JSON rows")
+    path = _bench_json_update("hier_sync_smoke" if smoke else "hier_sync",
+                              rows, smoke=smoke)
+    print(f"hier_sync_json,0,{path}")
+
+
+def hier_sync_smoke():
+    hier_sync(smoke=True)
+
+
 def merge_kernel_smoke():
     merge_kernel(1 << 14)
 
@@ -702,13 +823,13 @@ ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
        sync_roundtrip, engine_roundtrip, overlap_roundtrip,
        dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity,
-       mesh_wire]
+       mesh_wire, hier_sync]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
          engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
          spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke,
-         mesh_wire_smoke]
+         mesh_wire_smoke, hier_sync_smoke]
 
 
 def roofline_table():
@@ -737,6 +858,9 @@ def main(argv=None) -> None:
     ap.add_argument("--inner-mesh-wire", default="",
                     help="internal: n,d,reps (run inside the forced-device"
                          " subprocess)")
+    ap.add_argument("--inner-hier-sync", default="",
+                    help="internal: k,m,d,reps (run inside the forced-device"
+                         " subprocess)")
     args = ap.parse_args(argv)
 
     if args.inner_spmd_parity:
@@ -752,6 +876,11 @@ def main(argv=None) -> None:
     if args.inner_mesh_wire:
         n, d, reps = map(int, args.inner_mesh_wire.split(","))
         _mesh_wire_inner(n, d, reps)
+        return
+
+    if args.inner_hier_sync:
+        k, m, d, reps = map(int, args.inner_hier_sync.split(","))
+        _hier_sync_inner(k, m, d, reps)
         return
 
     print("name,us_per_call,derived")

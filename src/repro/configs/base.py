@@ -165,6 +165,16 @@ class SwarmConfig:
     #            pytree of the picked *_q8 collective schedule on "gossip"
     wire_dtype: str = "f32"
     wire_block: int = 512         # elements per int8 scale block (mult. of 128)
+    # two-level mesh cost model (core.comms): relative per-byte cost of the
+    # two link classes on a ("pod", "node") mesh. Intra-pod (ICI) links are
+    # cheap and plentiful; cross-pod (DCN) links are the scarce resource —
+    # real deployments sit around a 10:1 ratio. pick_schedule argmins
+    # Σ bytes(class)·cost(class), so raising cross_pod_cost above ~5.4× the
+    # intra cost flips a 2×2 int8 ring swarm onto the hierarchical
+    # pod-delegate schedules. On flat (1-D) meshes only the ratio's sign
+    # matters (all candidates ride one class) and defaults are neutral.
+    intra_pod_cost: float = 1.0
+    cross_pod_cost: float = 1.0
     seed: int = 0
 
 

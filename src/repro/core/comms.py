@@ -45,6 +45,23 @@ compression-aware reductions (`core.gossip`: quantized-chunk reduce-scatter
 + local dequant + quantized all_gather) whose payloads ride the wire at one
 byte per value — the picker follows the bytes, not the table.
 
+**Two-level (pod, node) meshes.** A swarm spanning pods has two link
+classes: cheap intra-pod (ICI) links and the scarce cross-pod (DCN) hop.
+On a 2-D mesh every schedule prices its traffic per class
+(:meth:`SyncSchedule.bytes_by_link_class`): the flat schedules above run
+over the joint ``("pod", "node")`` axis, so their collectives span pods and
+the whole payload is classed *cross*; the hierarchical schedules
+(``hier_fedavg_ring_q8`` / ``hier_fisher_ring_q8``, K pods × ``per_pod``
+nodes, ring topology, int8 wire) keep the f32 bulk intra-pod — a weighted
+intra-pod psum reduce, then each device carries a 1/per_pod chunk of its
+pod's average onto a cross-pod int8 error-feedback ring (one delegate
+chunk per device; k = 1 hop at K = 2 since the pair ring folds, else 2),
+then an intra-pod all_gather broadcast. :func:`pick_schedule` argmins
+Σ bytes(class) · ``cfg.{intra,cross}_pod_cost`` — with neutral costs the
+flat forms win (they move fewer total bytes); once the DCN hop costs ≳5.4×
+the ICI link, the hierarchical forms win. On 1-D meshes everything rides
+one class and the picker reduces exactly to the PR 4/5 bytes argmin.
+
 Error-feedback contract: v_t = θ_t − θ̂_{t−1} is quantized per block of
 ``wire_block`` elements (scale = max|v|/127, round-half-even — fully
 deterministic), θ̂_t = θ̂_{t−1} + dequant(v_t), so the residual θ_t − θ̂_t is
@@ -101,25 +118,66 @@ class SyncSchedule:
     wire_dtype: str = "f32"
     wire_block: int = 512
     simulated: bool = False  # engine/host backend: the SPMD-equivalent cost
+    # Two-level (pod, node) split of payload_factor. cross_factor is None on
+    # a flat mesh (one bandwidth domain — everything counts as intra). On a
+    # 2-D mesh: cross_factor·P values cross pods at wire_dtype and
+    # intra_factor·P values stay on intra-pod links at intra_dtype; flat
+    # schedules built for a 2-D mesh set cross_factor = payload_factor
+    # (their global collectives span the pod axis on every hop).
+    cross_factor: Optional[float] = None
+    intra_factor: float = 0.0
+    intra_dtype: str = "f32"
+
+    def _leg_bytes(self, vals: float, dtype: str) -> float:
+        out = vals * WIRE_BYTES[dtype]
+        if dtype == "int8":  # one f32 scale per wire block
+            out += vals / self.wire_block * 4.0
+        return out
+
+    def bytes_by_link_class(self, payload_params: int) -> dict:
+        """Predicted per-device wire bytes per link class for one sync.
+
+        ``{"intra": ..., "cross": ...}`` — on a flat mesh everything is
+        intra (there is no second class to cross)."""
+        p = float(payload_params)
+        if self.cross_factor is None:
+            return {"intra": self._leg_bytes(self.payload_factor * p,
+                                             self.wire_dtype),
+                    "cross": 0.0}
+        return {"intra": self._leg_bytes(self.intra_factor * p,
+                                         self.intra_dtype),
+                "cross": self._leg_bytes(self.cross_factor * p,
+                                         self.wire_dtype)}
 
     def bytes_per_sync(self, payload_params: int) -> float:
         """Predicted per-device wire bytes for one sync of P payload values."""
-        vals = self.payload_factor * float(payload_params)
-        out = vals * WIRE_BYTES[self.wire_dtype]
-        if self.wire_dtype == "int8":  # one f32 scale per wire block
-            out += vals / self.wire_block * 4.0
-        return out
+        b = self.bytes_by_link_class(payload_params)
+        return b["intra"] + b["cross"]
+
+    def cost_per_sync(self, payload_params: int, intra_cost: float = 1.0,
+                      cross_cost: float = 1.0) -> float:
+        """Σ bytes(class) · cost(class): what :func:`pick_schedule` argmins.
+
+        With equal per-byte costs this is plain bytes_per_sync, so flat-mesh
+        picks are unchanged from the PR 4/5 bytes argmin."""
+        b = self.bytes_by_link_class(payload_params)
+        return b["intra"] * intra_cost + b["cross"] * cross_cost
 
     def describe(self, payload_params: Optional[int] = None) -> str:
         p = _NOMINAL_P if payload_params is None else payload_params
         tag = " (simulated)" if self.simulated else ""
-        return (f"{self.name}[{self.collective}/{self.wire_dtype}]{tag}: "
-                f"{self.payload_factor:g}·P values, "
-                f"{self.bytes_per_sync(p) / 1e6:.3f} MB/sync at P={p}")
+        out = (f"{self.name}[{self.collective}/{self.wire_dtype}]{tag}: "
+               f"{self.payload_factor:g}·P values, "
+               f"{self.bytes_per_sync(p) / 1e6:.3f} MB/sync at P={p}")
+        if self.cross_factor is not None:
+            b = self.bytes_by_link_class(p)
+            out += (f" [intra {b['intra'] / 1e6:.3f} MB + "
+                    f"cross {b['cross'] / 1e6:.3f} MB]")
+        return out
 
 
-def candidate_schedules(cfg, *, per: int = 1,
-                        model_sharded: bool = False) -> List[SyncSchedule]:
+def candidate_schedules(cfg, *, per: int = 1, model_sharded: bool = False,
+                        mesh_shape=None) -> List[SyncSchedule]:
     """Every schedule that is CORRECT for this config's sync semantics.
 
     ``per`` = stacked nodes per mesh shard (N // mesh axis size); ppermute
@@ -128,6 +186,9 @@ def candidate_schedules(cfg, *, per: int = 1,
     PartitionSpecs; the q8 psum reductions chunk the globally-flattened
     payload and don't support that layout, so they drop out of the
     candidate set (the ring/gathered q8 forms handle inner specs).
+    ``mesh_shape`` = (n_pods, per_pod) on a two-level ("pod", "node") mesh;
+    flat candidates are then priced 100% cross-pod (their collectives span
+    the pod axis) and the hierarchical pod-delegate candidates join the set.
     """
     n = cfg.n_nodes
     wd = validate_wire_dtype(getattr(cfg, "wire_dtype", "f32"))
@@ -135,8 +196,14 @@ def candidate_schedules(cfg, *, per: int = 1,
     weighted = cfg.merge in ("fisher", "gradmatch")
     ring_ok = cfg.topology == "ring" and per == 1 and n >= 3
     psum_q8_ok = wd == "int8" and not model_sharded
+    two_level = mesh_shape is not None
+    # flat schedules on a 2-D mesh run over the joint axis: every hop of the
+    # collective may cross pods, so the whole payload prices as cross-pod
+    flat_kw = lambda factor: (
+        {"cross_factor": factor, "intra_factor": 0.0} if two_level else {})
     mk = lambda name, coll, factor, wdt: SyncSchedule(
-        name, coll, factor, wire_dtype=wdt, wire_block=wb)
+        name, coll, factor, wire_dtype=wdt, wire_block=wb,
+        **flat_kw(factor))
 
     out: List[SyncSchedule] = []
     if weighted:
@@ -159,6 +226,34 @@ def candidate_schedules(cfg, *, per: int = 1,
         out.append(mk("gathered_rows", "all_gather", 1.0 * n, wd))
         if ring_ok:
             out.append(mk("ring_ppermute", "ppermute", 2.0, wd))
+
+    if two_level:
+        k_pods, per_pod = mesh_shape
+        # hierarchical pod-delegate forms: intra-pod f32 psum reduce (
+        # 2(per−1)/per values of ring-allreduce traffic) + cross-pod int8 EF
+        # ring over per_pod-sharded delegate chunks (k·P/per_pod values,
+        # k = 1 at K = 2 since the pair ring folds both edges onto one peer)
+        # + intra-pod f32 all_gather broadcast (P values). Ring topology +
+        # int8 wire + one node per device only — same constraints as the
+        # flat ring q8 forms, minus the N ≥ 3 floor (the pod ring handles
+        # K = 2 as a single chunk swap).
+        hier_ok = (k_pods >= 2 and per_pod >= 2 and per == 1
+                   and n == k_pods * per_pod and wd == "int8"
+                   and not model_sharded and cfg.topology == "ring")
+        if hier_ok:
+            k_hops = 1.0 if k_pods == 2 else 2.0
+            cross = k_hops / per_pod
+            intra = 2.0 * (per_pod - 1) / per_pod + 1.0
+            if weighted:
+                out.append(SyncSchedule(
+                    "hier_fisher_ring_q8", "hier_ring",
+                    2.0 * (cross + intra), wire_dtype=wd, wire_block=wb,
+                    cross_factor=2.0 * cross, intra_factor=2.0 * intra))
+            else:
+                out.append(SyncSchedule(
+                    "hier_fedavg_ring_q8", "hier_ring", cross + intra,
+                    wire_dtype=wd, wire_block=wb,
+                    cross_factor=cross, intra_factor=intra))
     return out
 
 
@@ -175,14 +270,20 @@ def has_inner_sharding(param_specs) -> bool:
 
 
 def pick_schedule(cfg, *, per: int = 1, payload_params: Optional[int] = None,
-                  simulated: bool = False,
-                  model_sharded: bool = False) -> SyncSchedule:
+                  simulated: bool = False, model_sharded: bool = False,
+                  mesh_shape=None) -> SyncSchedule:
     """Cheapest correct schedule under the cost model (trace-time static:
-    everything it consumes — topology, merge, wire dtype, N, shard layout —
-    is config/mesh data, so the choice never retraces a compiled round)."""
+    everything it consumes — topology, merge, wire dtype, N, shard layout,
+    mesh shape, link costs — is config/mesh data, so the choice never
+    retraces a compiled round). On a two-level mesh the objective is
+    Σ bytes(link class) · per-byte cost (``cfg.intra_pod_cost`` /
+    ``cfg.cross_pod_cost``); on a flat mesh it reduces to the bytes argmin."""
     p = _NOMINAL_P if payload_params is None else payload_params
-    cands = candidate_schedules(cfg, per=per, model_sharded=model_sharded)
-    best = min(cands, key=lambda s: s.bytes_per_sync(p))
+    cands = candidate_schedules(cfg, per=per, model_sharded=model_sharded,
+                                mesh_shape=mesh_shape)
+    intra_cost = float(getattr(cfg, "intra_pod_cost", 1.0))
+    cross_cost = float(getattr(cfg, "cross_pod_cost", 1.0))
+    best = min(cands, key=lambda s: s.cost_per_sync(p, intra_cost, cross_cost))
     if simulated:
         best = dataclasses.replace(best, simulated=True)
     return best

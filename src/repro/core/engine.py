@@ -309,12 +309,30 @@ class SwarmEngine:
         # model-sharded payloads (inner param specs) drop the q8 psum
         # reductions from the candidate set — they chunk the globally-
         # flattened payload, which a model axis would scramble.
+        # The swarm axis may be a 2-tuple of mesh axis names — a two-level
+        # ("pod", "node") mesh: flat schedules then run over the joint axis
+        # and the per-link-class cost model decides whether the hierarchical
+        # pod-delegate forms win (cfg.intra_pod_cost / cfg.cross_pod_cost).
+        self._axis_size = None
+        self.mesh_shape = None
+        if backend == "gossip":
+            if isinstance(axis, tuple):
+                size = 1
+                for a in axis:
+                    size *= mesh.shape[a]
+                self._axis_size = size
+                if len(axis) == 2:
+                    self.mesh_shape = (mesh.shape[axis[0]],
+                                       mesh.shape[axis[1]])
+            else:
+                self._axis_size = mesh.shape[axis]
         per = 1 if backend != "gossip" else max(
-            1, cfg.n_nodes // mesh.shape[axis])
+            1, cfg.n_nodes // self._axis_size)
         self.sync_schedule = comms.pick_schedule(
             cfg, per=per, simulated=(backend != "gossip"),
             model_sharded=(backend == "gossip"
-                           and comms.has_inner_sharding(param_specs)))
+                           and comms.has_inner_sharding(param_specs)),
+            mesh_shape=self.mesh_shape)
         self._vstep = (None if train_step_fn is None
                        else jax.vmap(train_step_fn, in_axes=(0, 0, 0, None)))
         self._veval = None if eval_fn is None else jax.vmap(eval_fn)
@@ -391,6 +409,15 @@ class SwarmEngine:
         return strategy_propose(stacked, self.cfg, W, fishers=fishers,
                                 weights=w, strategy=self.strategy, rows=rows)
 
+    def _pod_rows(self):
+        """Pod-level ring mixing matrix for the hierarchical schedules
+        ([K, K], K = number of pods). `topo.ring_matrix` folds both
+        neighbour edges onto the single peer at K = 2, so the pair mesh
+        mixes s·ā_self + (1−s)·ā_peer."""
+        return jnp.asarray(
+            topo.ring_matrix(self.mesh_shape[0], self.cfg.self_weight),
+            jnp.float32)
+
     def _traced_W(self, active):
         """The round's mixing matrix, built in-graph from the runtime active
         mask (join/leave/failure never retraces the compiled round)."""
@@ -408,6 +435,10 @@ class SwarmEngine:
                                             int8 reduce-scatter + all_gather
           ring_ppermute / ring_topo_...   — two point-to-point ppermutes
           gathered_rows / gathered_topo_… — one all_gather + row contraction
+          hier_*_ring_q8                  — two-level ("pod", "node") mesh:
+                                            intra-pod psum reduce → cross-pod
+                                            delegate int8 EF ring → intra-pod
+                                            all_gather broadcast
 
         Point-to-point schedules wire-cast their payloads per
         ``cfg.wire_dtype``; with ``wire_dtype="int8"`` every schedule runs
@@ -453,7 +484,17 @@ class SwarmEngine:
                  else jnp.asarray(active).astype(bool))
             fishers = self.strategy.finalize_mass(fishers, a)
             w = active_weights_traced(self.data_sizes, a)
-            if sched in ("fisher_psum", "fisher_psum_q8"):
+            if sched == "hier_fisher_ring_q8":
+                # two-level mesh: intra-pod psums reduce the (num ⊕ mass)
+                # side channel, the pod-ring mixing matrix plays the role of
+                # the flat forms' topo rows (membership within a pod rides
+                # the finalized mass; a fully-absent pod is out of scope)
+                fishers = self.strategy.gossip_mass(fishers, w)
+                merged, new_wire = gossip.hier_fisher_ring_q8(
+                    payload, fishers, self._pod_rows(), wire, self.mesh,
+                    self.axis, inner_specs=specs, eps=self.strategy.eps,
+                    **qkw)
+            elif sched in ("fisher_psum", "fisher_psum_q8"):
                 # the strategy owns any weight-folding identity (gradmatch ≡
                 # w-weighted fisher ratio) — the two psums / the two EF
                 # delta-consensus streams do the rest
@@ -485,7 +526,8 @@ class SwarmEngine:
                     merged = fn(payload, fishers, rows, self.mesh, self.axis,
                                 inner_specs=specs, eps=self.strategy.eps,
                                 wire_dtype=wire_cast)
-        elif sched in ("fedavg_psum", "fedavg_psum_q8"):
+        elif sched in ("fedavg_psum", "fedavg_psum_q8",
+                       "hier_fedavg_ring_q8"):
             a = (None if active is None
                  else jnp.asarray(active).astype(bool))
             # runtime membership stays on the psum schedule: weights are
@@ -494,7 +536,14 @@ class SwarmEngine:
             # masked mixing rows, at psum instead of gather cost)
             w_eff = (jnp.asarray(weights, jnp.float32) if a is None
                      else active_weights_traced(sizes, a))
-            if sched == "fedavg_psum_q8":
+            if sched == "hier_fedavg_ring_q8":
+                # intra-pod weighted reduce normalizes per pod (the pod
+                # average is invariant to the global renormalization), then
+                # pod averages mix over the pod ring
+                merged, new_wire = gossip.hier_fedavg_ring_q8(
+                    payload, w_eff, self._pod_rows(), wire, self.mesh,
+                    self.axis, inner_specs=specs, **qkw)
+            elif sched == "fedavg_psum_q8":
                 merged, new_wire = gossip.fedavg_psum_q8(
                     payload, w_eff, wire, self.mesh, self.axis,
                     inner_specs=specs, **qkw)
@@ -556,8 +605,9 @@ class SwarmEngine:
             return None
         from repro.core import gossip
         return gossip.init_mesh_wire(self.sync_schedule.name, payload,
-                                     n_shards=self.mesh.shape[self.axis],
-                                     wire_block=self.wire_block)
+                                     n_shards=self._axis_size,
+                                     wire_block=self.wire_block,
+                                     mesh_shape=self.mesh_shape)
 
     def sync(self, params, val, active=None, stats=None, wire=None):
         """propose → in-graph validate → gate → fused commit. Pure/traceable.

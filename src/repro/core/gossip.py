@@ -38,6 +38,14 @@ int8 payloads + per-block f32 scales instead of f32/bf16 values:
     of int8 chunks + local dequant-and-sum at the chunk owner, with a
     second-stage EF residual per chunk) followed by a quantized all_gather
     of the reduced chunks into a replicated consensus accumulator.
+  * ``hier_fedavg_ring_q8`` / ``hier_fisher_ring_q8`` — two-level
+    ``("pod", "node")`` meshes: the flat schedules above also run over the
+    joint axis tuple unchanged, but these keep the f32 bulk on intra-pod
+    links — a weighted intra-pod psum reduce, then each device delegates a
+    1/per_pod chunk of its pod's reduction onto a cross-pod int8 EF ring
+    (per-pod residual + neighbour-pod replicas riding ``SwarmState.wire``),
+    then an intra-pod all_gather broadcast. Cross-pod (DCN) traffic drops
+    to k·P/per_pod int8 values per device (k = 1 at two pods, else 2).
 
 All quantization goes through the shared `core.comms` quant core, so the
 mesh wire can never diverge from the engine-backend EF contract. Every EF
@@ -75,6 +83,25 @@ def shard_map(f, mesh, in_specs, out_specs, check_rep=True):
         return _shard_map(f, check_rep=False, **kw)
     except TypeError:  # pragma: no cover — kwarg renamed in newer jax
         return _shard_map(f, check_vma=False, **kw)
+
+
+def axis_size(mesh, axis) -> int:
+    """Total shard count along the swarm axis — a single mesh axis name or
+    a tuple of names (two-level meshes gossip over the joint axis)."""
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def _pod_axes(axis):
+    """The (pod, node) axis names of a two-level swarm axis."""
+    if not (isinstance(axis, tuple) and len(axis) == 2):
+        raise ValueError("hierarchical schedules need a two-level swarm axis "
+                         f"(pod, node); got {axis!r}")
+    return axis[0], axis[1]
 
 
 def _mapped(fn, mesh, axis, stacked, *extra, inner_specs=None):
@@ -120,7 +147,7 @@ def _wire_cast(z, wire_dtype):
 
 def fedavg_gossip(stacked, weights, mesh, axis: str, inner_specs=None):
     """Weighted global merge: θ_i ← Σ_j w_j θ_j for every node i."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
 
     def f(x, w):  # x: [N/n_shards, ...] local shard; w: [N]
         idx = jax.lax.axis_index(axis)
@@ -138,7 +165,7 @@ def fedavg_gossip(stacked, weights, mesh, axis: str, inner_specs=None):
 def ring_gossip(stacked, mesh, axis: str, self_weight: float = 0.5,
                 inner_specs=None):
     """Sparse P2P: θ_i ← s·θ_i + (1-s)/2·(θ_{i-1} + θ_{i+1})."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
 
@@ -215,7 +242,7 @@ def topo_fisher_gossip(stacked, fishers, rows, mesh, axis: str,
     (2·N·P values at the wire dtype), then contracted locally per row —
     the general-rows form; ring rows take the 4·P two-``ppermute`` schedule
     (:func:`ring_topo_fisher_gossip`) instead."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
 
     def f(x, fsh, Wm):  # x/fsh: [per, ...] local shard; Wm: [N, N]
         idx = jax.lax.axis_index(axis)
@@ -247,7 +274,7 @@ def _ring_perms(n: int):
 
 
 def _check_one_node_per_shard(stacked, mesh, axis, what: str):
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     lead = jax.tree.leaves(stacked)[0].shape[0]
     if lead != n:
         raise ValueError(
@@ -270,7 +297,7 @@ def ring_rows_gossip(stacked, W, mesh, axis: str, inner_specs=None,
     self-weight. Only neighbour payloads are wire-cast; the self term stays
     exact local precision. Requires one node per shard and N ≥ 3."""
     _check_one_node_per_shard(stacked, mesh, axis, "ring_rows_gossip")
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     fwd, bwd = _ring_perms(n)
 
     def f(x, Wm):  # x: [1, ...] this node's shard; Wm: [N, N]
@@ -305,7 +332,7 @@ def ring_topo_fisher_gossip(stacked, fishers, rows, mesh, axis: str,
     Requires one node per shard and N ≥ 3 (ring rows only have the three
     per-row entries this schedule exchanges)."""
     _check_one_node_per_shard(stacked, mesh, axis, "ring_topo_fisher_gossip")
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     fwd, bwd = _ring_perms(n)
 
     def f(x, fsh, Wm):  # x/fsh: [1, ...]; Wm: [N, N] ring-structured rows
@@ -397,7 +424,7 @@ def _padded_chunk(shape, n: int, wire_block: int) -> int:
 
 
 def init_mesh_wire(schedule: str, payload, *, n_shards: int,
-                   wire_block: int = 512):
+                   wire_block: int = 512, mesh_shape=None):
     """Zero EF wire state for a ``*_q8`` mesh schedule over a stacked payload
     pytree ([N, ...] leaves; None leaves mirror as None). The returned pytree
     rides ``SwarmState.wire`` next to the params:
@@ -409,6 +436,11 @@ def init_mesh_wire(schedule: str, payload, *, n_shards: int,
       psum q8:   {"ref"} per-shard contribution reference (one row/shard),
                  {"cons"} replicated consensus row, {"cres"} second-stage
                  chunk residual (one chunk per shard)
+      hier q8:   {"ref", "left"[, "right"]} — per-device delegate-chunk
+                 references ([N, chunk] rows, sharded over the joint
+                 ("pod", "node") axis) for own pod + neighbour pods; needs
+                 ``mesh_shape=(n_pods, per_pod)``, and "right" exists only
+                 for n_pods > 2 (a two-pod ring folds onto one peer)
     """
     nones = lambda v: v is None
     zlike = lambda x: (None if x is None
@@ -433,6 +465,18 @@ def init_mesh_wire(schedule: str, payload, *, n_shards: int,
         return {"ref": tmap(zshard), "cons": tmap(zrow), "cres": tmap(zchunk)}
     if schedule == "fisher_psum_q8":
         return {"ref": pair(zshard), "cons": pair(zrow), "cres": pair(zchunk)}
+    if schedule in ("hier_fedavg_ring_q8", "hier_fisher_ring_q8"):
+        if mesh_shape is None:
+            raise ValueError(f"{schedule} needs mesh_shape=(n_pods, per_pod)")
+        k_pods, per_pod = mesh_shape
+        zhier = lambda x: (None if x is None else jnp.zeros(
+            (k_pods * per_pod, _padded_chunk(x.shape, per_pod, wire_block)),
+            jnp.float32))
+        leaf = tmap if schedule == "hier_fedavg_ring_q8" else pair
+        out = {"ref": leaf(zhier), "left": leaf(zhier)}
+        if k_pods > 2:
+            out["right"] = leaf(zhier)
+        return out
     raise ValueError(f"no mesh wire state for schedule {schedule!r}")
 
 
@@ -445,7 +489,7 @@ def ring_rows_gossip_q8(stacked, W, wire, mesh, axis: str, inner_specs=None,
     match the senders bit-for-bit; the self term stays exact local f32.
     Returns ``(merged, new_wire)``."""
     _check_one_node_per_shard(stacked, mesh, axis, "ring_rows_gossip_q8")
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     fwd, bwd = _ring_perms(n)
     Wj = jnp.asarray(W, jnp.float32)
 
@@ -488,7 +532,7 @@ def ring_topo_fisher_gossip_q8(stacked, fishers, rows, wire, mesh, axis: str,
     Returns ``(merged, new_wire)``."""
     _check_one_node_per_shard(stacked, mesh, axis,
                               "ring_topo_fisher_gossip_q8")
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     fwd, bwd = _ring_perms(n)
     Wj = jnp.asarray(rows, jnp.float32)
 
@@ -544,7 +588,7 @@ def matrix_gossip_q8(stacked, W, wire, mesh, axis: str, inner_specs=None,
     see the same deltas, so the table stays bit-identical across the mesh)
     and contracts its mixing rows against the reconstructions.
     Returns ``(merged, new_wire)``."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     Wj = jnp.asarray(W, jnp.float32)
 
     def f(x, table, Wm):  # x: [per, ...] local; table: [N, ...] replicated
@@ -581,7 +625,7 @@ def topo_fisher_gossip_q8(stacked, fishers, rows, wire, mesh, axis: str,
     table and moved by ONE stacked int8 all_gather plus one scale gather
     (PR 4's fused-gather invariant, kept at the q8 byte cost), then
     contracted per mixing row. Returns ``(merged, new_wire)``."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     Wj = jnp.asarray(rows, jnp.float32)
 
     def f(x, fsh, tn, tm, Wm):
@@ -668,7 +712,7 @@ def fedavg_psum_q8(stacked, weights, wire, mesh, axis: str, inner_specs=None,
     of Σ_j w_j θ_j, built from int8 wire traffic only (see
     :func:`_psum_q8_stream`). Weights may be traced (runtime membership).
     Returns ``(merged, new_wire)``."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     if inner_specs is not None and any(
             s is not None for s in jax.tree.leaves(inner_specs)):
         raise ValueError("fedavg_psum_q8 does not support model-sharded "
@@ -710,7 +754,7 @@ def fisher_psum_q8(stacked, fishers, wire, mesh, axis: str, inner_specs=None,
     reconstructions. Any weight folding (gradmatch) happens in the mass
     before the call, exactly like :func:`fisher_gossip`.
     Returns ``(merged, new_wire)``."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
     if inner_specs is not None and any(
             s is not None for s in jax.tree.leaves(inner_specs)):
         raise ValueError("fisher_psum_q8 does not support model-sharded "
@@ -751,10 +795,206 @@ def fisher_psum_q8(stacked, fishers, wire, mesh, axis: str, inner_specs=None,
                     "cres": {"num": qn2, "mass": qm2}}
 
 
+# ---------------------------------------------------------------------------
+# hierarchical two-level schedules: intra-pod reduce → pod-delegate int8 EF
+# ring → intra-pod broadcast
+# ---------------------------------------------------------------------------
+
+def _hier_shapes(mesh, axis, stacked):
+    """Validate a hierarchical call and return (pod_ax, node_ax, K, per)."""
+    pod_ax, node_ax = _pod_axes(axis)
+    k_pods = mesh.shape[pod_ax]
+    per_pod = mesh.shape[node_ax]
+    lead = jax.tree.leaves(stacked)[0].shape[0]
+    if lead != k_pods * per_pod:
+        raise ValueError(
+            f"hierarchical schedules need one node per device (leading axis "
+            f"{lead} vs mesh {pod_ax}×{node_ax}={k_pods}×{per_pod})")
+    if k_pods < 2 or per_pod < 2:
+        raise ValueError(f"hierarchical schedules need ≥2 pods and ≥2 nodes "
+                         f"per pod; got {k_pods}×{per_pod}")
+    return pod_ax, node_ax, k_pods, per_pod
+
+
+def _refuse_inner_sharding(inner_specs, what: str):
+    if inner_specs is not None and any(
+            s is not None for s in jax.tree.leaves(inner_specs)):
+        raise ValueError(f"{what} does not support model-sharded payloads "
+                         "(inner_specs): delegate chunks slice the "
+                         "globally-flattened payload")
+
+
+def hier_fedavg_ring_q8(stacked, weights, pod_rows, wire, mesh, axis,
+                        inner_specs=None, wire_block: int = 512):
+    """Hierarchical weighted merge on a two-level ``("pod", "node")`` mesh
+    (the ``hier_fedavg_ring_q8`` schedule):
+
+      1. **intra-pod reduce** — a weighted f32 psum over the node axis gives
+         every device its pod's average  ā_q = Σ_{i∈q} w_i θ_i / Σ_{i∈q} w_i
+         (2·(per−1)/per values of intra-pod ring-allreduce traffic);
+      2. **pod-delegate int8 EF ring** — each device owns the 1/per_pod
+         chunk of the flattened ā_q matching its node index and ppermutes it
+         across pods as an int8 delta + per-block scales against a per-pod
+         EF residual (neighbour-pod replicas advance from the identical
+         stream). Only this leg crosses the DCN: k·P/per_pod int8 values
+         per device, k = 1 at two pods (the pair ring folds both edges onto
+         one peer and "right" drops out of the wire), else 2;
+      3. **intra-pod broadcast** — a node-axis all_gather reassembles the
+         pod-row-mixed chunks (P f32 values, intra-pod).
+
+    The self-pod term mixes at exact f32; neighbour pods telescope through
+    the EF wire, so on settling inputs every node converges to the pod-ring
+    mix  Σ_q pod_rows[pod(i), q] · ā_q . Weights may be traced (runtime
+    membership) but every pod needs ≥1 active node for its average to be
+    meaningful. Returns ``(merged, new_wire)``."""
+    pod_ax, node_ax, k_pods, per_pod = _hier_shapes(mesh, axis, stacked)
+    _refuse_inner_sharding(inner_specs, "hier_fedavg_ring_q8")
+    fwd, bwd = _ring_perms(k_pods)
+    two_sided = k_pods > 2
+    Wp = jnp.asarray(pod_rows, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+
+    def f(x, ref, lft, rgt, wv, Wpm):  # x/ref/lft/rgt: [1, ...] per device
+        p = jax.lax.axis_index(pod_ax)
+        j = jax.lax.axis_index(node_ax)
+        wl = jax.lax.dynamic_slice_in_dim(wv, p * per_pod + j, 1, 0)  # [1]
+        xf = x.astype(jnp.float32)
+        ones = (1,) + (1,) * (xf.ndim - 1)
+        num = jax.lax.psum(xf * wl.reshape(ones), node_ax)
+        mass = jax.lax.psum(wl, node_ax)
+        avg = num / jnp.maximum(mass, 1e-30).reshape(ones)
+        flat = avg.reshape(1, -1)
+        d = flat.shape[1]
+        pad = (-d) % (per_pod * wire_block)
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        clen = flat.shape[1] // per_pod
+        chunk = jax.lax.dynamic_slice_in_dim(flat, j * clen, clen, 1)
+        q, s, ref2 = _ef_encode(chunk, ref, wire_block)
+        ql = jax.lax.ppermute(q, pod_ax, fwd)
+        sl = jax.lax.ppermute(s, pod_ax, fwd)
+        lft2 = _ef_apply(lft, ql, sl, wire_block)
+        mixed = Wpm[p, p] * chunk + Wpm[p, (p - 1) % k_pods] * lft2
+        if two_sided:
+            qr = jax.lax.ppermute(q, pod_ax, bwd)
+            sr = jax.lax.ppermute(s, pod_ax, bwd)
+            rgt2 = _ef_apply(rgt, qr, sr, wire_block)
+            mixed = mixed + Wpm[p, (p + 1) % k_pods] * rgt2
+        full = jax.lax.all_gather(mixed, node_ax, tiled=True)  # [per, clen]
+        out = full.reshape(1, per_pod * clen)[:, :d].reshape(xf.shape)
+        if two_sided:
+            return out.astype(x.dtype), ref2, lft2, rgt2
+        return out.astype(x.dtype), ref2, lft2
+
+    n_out = 4 if two_sided else 3
+
+    def leaf(x, ref, lft, rgt, spec):
+        in_spec = P(axis)
+        sm = shard_map(f, mesh, in_specs=(in_spec,) * 4 + (P(), P()),
+                       out_specs=(in_spec,) * n_out, check_rep=False)
+        return sm(x, ref, lft, rgt, w, Wp)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    rgt_in = wire["right"] if two_sided else wire["left"]  # dummy at K=2
+    outs = _leafwise(leaf, (stacked, wire["ref"], wire["left"], rgt_in,
+                            specs), n_out)
+    if two_sided:
+        merged, ref2, lft2, rgt2 = outs
+        return merged, {"ref": ref2, "left": lft2, "right": rgt2}
+    merged, ref2, lft2 = outs
+    return merged, {"ref": ref2, "left": lft2}
+
+
+def hier_fisher_ring_q8(stacked, fishers, pod_rows, wire, mesh, axis,
+                        inner_specs=None, eps: float = 1e-8,
+                        wire_block: int = 512):
+    """Hierarchical importance-weighted merge on a two-level mesh (the
+    ``hier_fisher_ring_q8`` schedule) — :func:`hier_fedavg_ring_q8` with the
+    fused ``(F⊙θ ⊕ F)`` side channel of the ring fisher forms: the intra-pod
+    psums reduce the pod numerator Σ (F+eps)⊙θ and mass Σ (F+eps), both ride
+    the cross-pod delegate ring as ONE stacked two-stream EF payload
+    (2·k·P/per_pod int8 values per device), and the merge is the ratio of
+    the pod-row-mixed streams. Any weight folding (gradmatch) happens in the
+    mass before the call, exactly like :func:`fisher_psum_q8`.
+    Returns ``(merged, new_wire)``."""
+    pod_ax, node_ax, k_pods, per_pod = _hier_shapes(mesh, axis, stacked)
+    _refuse_inner_sharding(inner_specs, "hier_fisher_ring_q8")
+    fwd, bwd = _ring_perms(k_pods)
+    two_sided = k_pods > 2
+    Wp = jnp.asarray(pod_rows, jnp.float32)
+
+    def f(x, fsh, rn, rm, ln, lm, rgn, rgm, Wpm):
+        p = jax.lax.axis_index(pod_ax)
+        j = jax.lax.axis_index(node_ax)
+        xf = x.astype(jnp.float32)
+        ff = fsh.astype(jnp.float32) + eps
+        num = jax.lax.psum(ff * xf, node_ax)          # [1, ...] pod Σ F⊙θ
+        den = jax.lax.psum(ff, node_ax)               # [1, ...] pod Σ F
+        zn = num.reshape(1, -1)
+        zm = den.reshape(1, -1)
+        d = zn.shape[1]
+        pad = (-d) % (per_pod * wire_block)
+        if pad:
+            zn = jnp.pad(zn, ((0, 0), (0, pad)))
+            zm = jnp.pad(zm, ((0, 0), (0, pad)))
+        clen = zn.shape[1] // per_pod
+        z = jnp.concatenate([zn, zm], axis=0)         # [2, Dp]
+        chunk = jax.lax.dynamic_slice_in_dim(z, j * clen, clen, 1)  # [2, ·]
+        refs = jnp.concatenate([rn, rm], axis=0)
+        q, s, ref2 = _ef_encode(chunk, refs, wire_block)
+        ql = jax.lax.ppermute(q, pod_ax, fwd)
+        sl = jax.lax.ppermute(s, pod_ax, fwd)
+        lft2 = _ef_apply(jnp.concatenate([ln, lm], axis=0), ql, sl,
+                         wire_block)
+        r_self = Wpm[p, p]
+        r_left = Wpm[p, (p - 1) % k_pods]
+        num_mix = r_self * chunk[0:1] + r_left * lft2[0:1]
+        den_mix = r_self * chunk[1:2] + r_left * lft2[1:2]
+        if two_sided:
+            qr = jax.lax.ppermute(q, pod_ax, bwd)
+            sr = jax.lax.ppermute(s, pod_ax, bwd)
+            rgt2 = _ef_apply(jnp.concatenate([rgn, rgm], axis=0), qr, sr,
+                             wire_block)
+            r_right = Wpm[p, (p + 1) % k_pods]
+            num_mix = num_mix + r_right * rgt2[0:1]
+            den_mix = den_mix + r_right * rgt2[1:2]
+        mixed = num_mix / jnp.maximum(den_mix, 1e-30)  # [1, clen]
+        full = jax.lax.all_gather(mixed, node_ax, tiled=True)
+        out = full.reshape(1, per_pod * clen)[:, :d].reshape(xf.shape)
+        if two_sided:
+            return (out.astype(x.dtype), ref2[0:1], ref2[1:2],
+                    lft2[0:1], lft2[1:2], rgt2[0:1], rgt2[1:2])
+        return (out.astype(x.dtype), ref2[0:1], ref2[1:2],
+                lft2[0:1], lft2[1:2])
+
+    n_out = 7 if two_sided else 5
+
+    def leaf(x, fsh, rn, rm, ln, lm, rgn, rgm, spec):
+        in_spec = P(axis)
+        sm = shard_map(f, mesh, in_specs=(in_spec,) * 8 + (P(),),
+                       out_specs=(in_spec,) * n_out, check_rep=False)
+        return sm(x, fsh, rn, rm, ln, lm, rgn, rgm, Wp)
+
+    specs = _inner_spec_tree(stacked, inner_specs)
+    ref, lft = wire["ref"], wire["left"]
+    rgt = wire["right"] if two_sided else wire["left"]  # dummy at K=2
+    outs = _leafwise(
+        leaf, (stacked, fishers, ref["num"], ref["mass"], lft["num"],
+               lft["mass"], rgt["num"], rgt["mass"], specs), n_out)
+    if two_sided:
+        merged, rn2, rm2, ln2, lm2, rgn2, rgm2 = outs
+        return merged, {"ref": {"num": rn2, "mass": rm2},
+                        "left": {"num": ln2, "mass": lm2},
+                        "right": {"num": rgn2, "mass": rgm2}}
+    merged, rn2, rm2, ln2, lm2 = outs
+    return merged, {"ref": {"num": rn2, "mass": rm2},
+                    "left": {"num": ln2, "mass": lm2}}
+
+
 def matrix_gossip(stacked, W, mesh, axis: str, inner_specs=None,
                   wire_dtype=None):
     """General mixing matrix (dynamic membership): all_gather + local row mix."""
-    n = mesh.shape[axis]
+    n = axis_size(mesh, axis)
 
     def f(x, Wm):  # x: [per, ...]; Wm: [N, N]
         idx = jax.lax.axis_index(axis)

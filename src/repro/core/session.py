@@ -126,7 +126,10 @@ class SwarmSession:
         pytree with leading node axis.
     data_sizes : per-node dataset sizes (fedavg / weighted-merge weights).
     backend : ``"engine"`` (default) | ``"gossip"`` | ``"host"``.
-    mesh / axis / param_specs : gossip backend placement.
+    mesh / axis / param_specs : gossip backend placement; ``axis`` is a mesh
+        axis name, or a 2-tuple ``("pod", "node")`` on a two-level mesh —
+        gossip then runs over the joint axis and the per-link-class cost
+        model may pick the hierarchical pod-delegate schedules.
     seed : session rng seed (defaults to ``cfg.seed``).
     """
 
@@ -180,6 +183,8 @@ class SwarmSession:
                 stacked_params, cfg.lora_only, n)
             self.predicted_sync_bytes = self.sync_schedule.bytes_per_sync(
                 self.payload_params)
+            self.predicted_link_bytes = self.sync_schedule.bytes_by_link_class(
+                self.payload_params)
             return
 
         self.engine = SwarmEngine(
@@ -198,11 +203,15 @@ class SwarmSession:
             stats=self.engine.init_stats(stacked_params), wire=wire,
             active=jnp.ones((n,), bool), rng=rng,
             round=jnp.asarray(0, jnp.int32), step=jnp.asarray(0, jnp.int32))
-        # cost-model-driven schedule choice, surfaced for logs/benchmarks
+        # cost-model-driven schedule choice, surfaced for logs/benchmarks;
+        # predicted_link_bytes splits the prediction per link class on a
+        # two-level ("pod", "node") mesh ({"intra": ..., "cross": ...})
         self.sync_schedule = self.engine.sync_schedule
         self.payload_params = comms.payload_param_count(
             stacked_params, cfg.lora_only, n)
         self.predicted_sync_bytes = self.sync_schedule.bytes_per_sync(
+            self.payload_params)
+        self.predicted_link_bytes = self.sync_schedule.bytes_by_link_class(
             self.payload_params)
         logger.info("sync schedule: %s",
                     self.sync_schedule.describe(self.payload_params))

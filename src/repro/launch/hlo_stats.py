@@ -69,6 +69,109 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+# --- per-link-class split (two-level ("pod", "node") meshes) ----------------
+# A collective participates in exactly one link class: "intra" when every one
+# of its device groups (or source→target pairs) stays inside a single pod,
+# "cross" as soon as any group spans pods — a global collective over the
+# joint axis is bounded by its slowest (DCN) hop, so its whole payload prices
+# as cross. This mirrors the `core.comms` analytic convention (flat schedules
+# on a 2-D mesh carry cross_factor = payload_factor).
+
+# literal groups: replica_groups={{0,1},{2,3}}
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+# iota form: replica_groups=[2,2]<=[4] — reshape iota(4) to [2,2], rows are
+# groups; an optional T(perm) transposes the iota source first
+_IOTA_RE = re.compile(
+    r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+def _iota_list(src_dims, perm):
+    """iota(prod(src_dims)) reshaped to src_dims, transposed by perm (or
+    identity), flattened — pure-python strides."""
+    total = 1
+    for d in src_dims:
+        total *= d
+    if perm is None:
+        return list(range(total))
+    tshape = [src_dims[p] for p in perm]
+    # row-major strides of the source shape
+    strides = [1] * len(src_dims)
+    for i in range(len(src_dims) - 2, -1, -1):
+        strides[i] = strides[i + 1] * src_dims[i + 1]
+    out = []
+    for k in range(total):
+        rem, tidx = k, []
+        for d in reversed(tshape):
+            tidx.append(rem % d)
+            rem //= d
+        tidx.reverse()
+        out.append(sum(strides[perm[i]] * tidx[i] for i in range(len(perm))))
+    return out
+
+
+def _parse_groups(line: str):
+    """Device groups of one collective instruction, or None if unparseable
+    (an empty ``replica_groups={}`` means "all devices" and also maps to
+    None — both conservatively classify as cross)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x]
+                for g in m.group(1).strip("{}").split("},{")]
+    m = _IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        src = [int(x) for x in m.group(2).split(",")]
+        perm = ([int(x) for x in m.group(3).split(",")]
+                if m.group(3) else None)
+        flat = _iota_list(src, perm)
+        group_len = dims[-1]
+        return [flat[i:i + group_len] for i in range(0, len(flat), group_len)]
+    m = _PAIRS_RE.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x]
+                for g in m.group(1).strip("{}").split("},{")]
+    return None
+
+
+def pod_device_map(n_pods: int, per_pod: int) -> Dict[int, int]:
+    """device id → pod id for the row-major ``(pod, node)`` mesh layout of
+    `launch.mesh.make_two_level_swarm_mesh` (device p·per_pod + j ∈ pod p)."""
+    return {p * per_pod + j: p
+            for p in range(n_pods) for j in range(per_pod)}
+
+
+def collective_bytes_by_link(hlo_text: str,
+                             pod_of: Dict[int, int]) -> Dict[str, int]:
+    """Split :func:`collective_bytes` per link class on a two-level mesh.
+
+    ``pod_of`` maps device id → pod id (see :func:`pod_device_map`). An
+    instruction whose every replica group / permute pair stays inside one
+    pod counts as ``intra``; any pod-spanning group — or unparseable /
+    unknown-device groups — counts as ``cross`` (unattributed traffic must
+    never inflate the cheap class)."""
+    out = {"intra": 0, "cross": 0, "count": 0}
+
+    def one_pod(group) -> bool:
+        pods = set()
+        for d in group:
+            if d not in pod_of:
+                return False
+            pods.add(pod_of[d])
+        return len(pods) <= 1
+
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        groups = _parse_groups(line)
+        intra = groups is not None and all(one_pod(g) for g in groups)
+        out["intra" if intra else "cross"] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    out["total"] = out["intra"] + out["cross"]
+    return out
+
+
 @dataclass
 class Roofline:
     arch: str

@@ -38,6 +38,31 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devs[:n])
 
 
+def make_two_level_swarm_mesh(n_pods: int = 2, per_pod: int = 2):
+    """Two-level swarm mesh: ``(n_pods, per_pod)`` over ``("pod", "node")``.
+
+    The swarm axis is the AXIS TUPLE ``("pod", "node")`` — flat gossip
+    schedules run over the joint axis unchanged, while the `core.comms`
+    per-link-class cost model may lower to the hierarchical pod-delegate
+    schedules (`core.gossip.hier_*_ring_q8`) that keep bulk traffic
+    intra-pod. Devices are row-major: device ``p·per_pod + j`` is node ``j``
+    of pod ``p`` (the layout `launch.hlo_stats.pod_device_map` assumes).
+    Returns ``(mesh, ("pod", "node"))``.
+    """
+    import jax
+
+    n = n_pods * per_pod
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before any "
+            "jax import to simulate the two-level mesh on CPU")
+    mesh = jax.make_mesh((n_pods, per_pod), ("pod", "node"),
+                         devices=devs[:n])
+    return mesh, ("pod", "node")
+
+
 def make_swarm_mesh(n_nodes: int = 4, *, multi_pod: bool = False):
     """Swarm training mesh: leading `node` axis is the gossip axis.
 

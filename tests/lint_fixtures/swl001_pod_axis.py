@@ -1,0 +1,51 @@
+"""SWL001 fixture (two-level meshes): the registry ``pod``/``node`` axes —
+alone, as the joint ``("pod", "node")`` swarm-axis tuple, and inside mesh
+construction — are clean; an off-registry ``"dcn"`` axis flags, including
+inside embedded subprocess code strings.
+
+Intentionally violating — tests/test_lint.py asserts the exact finding set
+declared by the `LINT-EXPECT` markers, so marked lines prove true positives
+and every unmarked line proves a true negative.
+"""
+import jax
+
+
+def good_two_level_mesh():
+    return jax.make_mesh((2, 2), ("pod", "node"))
+
+
+def good_joint_axis_psum(x):
+    # flat gossip schedules run over the joint axis tuple on a 2-D mesh
+    return jax.lax.psum(x, ("pod", "node"))
+
+
+def good_hier_legs(x, perm):
+    # the hierarchical pod-delegate schedule's per-leg collectives
+    num = jax.lax.psum(x, "node")
+    lft = jax.lax.ppermute(num, "pod", perm)
+    return jax.lax.all_gather(lft, "node", tiled=True)
+
+
+def bad_dcn_psum(x):
+    return jax.lax.psum(x, "dcn")  # LINT-EXPECT: SWL001
+
+
+def bad_dcn_in_axis_tuple(x):
+    # one off-registry element poisons an otherwise-good tuple
+    return jax.lax.psum(x, ("pod", "dcn"))  # LINT-EXPECT: SWL001
+
+
+def bad_dcn_mesh():
+    return jax.make_mesh((2, 2), ("dcn", "node"))  # LINT-EXPECT: SWL001
+
+
+def embedded_two_level_subprocess():
+    # the 2x2 ("pod", "node") SPMD tests build their programs as code
+    # strings; SWL001 parses those too — registry axes pass, "dcn" flags
+    code = """
+import jax
+mesh = jax.make_mesh((2, 2), ("pod", "node"))
+g = jax.lax.all_gather(1.0, "node", tiled=True)
+bad = jax.lax.ppermute(1.0, "dcn", [(0, 1)])  # LINT-EXPECT: SWL001
+"""
+    return code

@@ -87,6 +87,14 @@ def test_smoke_covers_swarm_sync_suite(smoke_out):
     assert ring_f32["predicted_bytes_per_sync"] == pytest.approx(16 * p)
     assert ring_i8["predicted_bytes_per_sync"] < ring_f32[
         "predicted_bytes_per_sync"] / 3
+    # every row is tagged with its mesh shape and per-link-class bytes;
+    # engine-backend sessions simulate a flat 1-D mesh, so everything is
+    # intra-class and the split sums back to the total
+    for r in rows:
+        assert r["mesh_shape"] == [r["n_nodes"]]
+        assert r["predicted_cross_bytes"] == 0.0
+        assert (r["predicted_intra_bytes"] + r["predicted_cross_bytes"]
+                == pytest.approx(r["predicted_bytes_per_sync"]))
     assert doc["ring_parity_smoke"]  # subprocess rows made it into the JSON
 
 
@@ -98,6 +106,39 @@ def test_smoke_covers_ring_sync_parity(smoke_out):
     assert float(_row(smoke_out, "ring_sync_gathered_max_diff")[2]) < 1e-5
     assert float(_row(smoke_out, "ring_sync_ppermute_P_values")[2]) <= 4.5
     assert float(_row(smoke_out, "ring_sync_bytes_ratio")[2]) < 1.0
+
+
+def test_smoke_covers_hier_sync(smoke_out):
+    """The two-level-mesh rows (ISSUE 7): HLO-measured cross-pod bytes of
+    the hierarchical int8 fedavg ≤ 0.35× the flat ring q8's, the flat form
+    prices 100% cross-pod, and every row carries its mesh shape plus the
+    predicted and measured per-link-class byte split."""
+    assert float(_row(smoke_out, "hier_sync_cross_bytes_ratio")[2]) <= 0.35
+    path = _row(smoke_out, "hier_sync_json")[2].strip()
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["hier_sync_smoke"]
+    by_sched = {r["schedule"]: r for r in rows}
+    assert len(by_sched) == len(rows) == 2
+    hier = by_sched["hier_fedavg_ring_q8"]
+    flat = by_sched["ring_ppermute"]
+    for r in rows:
+        assert r["mesh_shape"] == [2, 2]
+        assert r["wire_dtype"] == "int8"
+    # the flat joint-axis ring has no intra-pod class: every ppermute hop
+    # may span pods, so measurement and prediction both price it all-cross
+    assert flat["measured_intra_bytes"] == 0
+    assert flat["predicted_intra_bytes"] == 0.0
+    assert flat["measured_cross_bytes"] == pytest.approx(
+        flat["predicted_cross_bytes"])
+    # hierarchical: cross is exactly the delegate-chunk wire, intra within
+    # a scalar all-reduce of the predicted psum + all_gather payload
+    assert hier["measured_cross_bytes"] == pytest.approx(
+        hier["predicted_cross_bytes"])
+    assert hier["measured_intra_bytes"] == pytest.approx(
+        hier["predicted_intra_bytes"], rel=0.01)
+    assert (hier["measured_cross_bytes"]
+            <= 0.35 * flat["measured_cross_bytes"])
 
 
 def test_smoke_covers_mesh_wire(smoke_out):

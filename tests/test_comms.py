@@ -203,6 +203,39 @@ def _values_per_sync(expr: str, n: int) -> float:
     return float(eval(s, {"__builtins__": {}}, {"N": n, "P": 1.0}))
 
 
+def _parse_hier_schedule_table():
+    """Rows of the CHANGES.md hierarchical (two-level mesh) schedule table:
+    (topology, merges, wires, schedule, intra-expr, cross-expr, collective).
+    The 7-cell format is deliberately invisible to the flat-table parser."""
+    lines = open(_CHANGES_MD).read().splitlines()
+    start = next(i for i, l in enumerate(lines)
+                 if l.startswith("## Hierarchical schedule table"))
+    rows = []
+    for line in lines[start:]:
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) != 7 or cells[0] in ("topology", ""):
+            continue
+        if set(cells[0]) <= {"-"}:
+            continue
+        topo, merges, wires, sched, intra, cross, coll = cells
+        rows.append((topo, merges.split("/"), wires.split("/"), sched,
+                     intra, cross, coll))
+    assert rows, "no hierarchical schedule table found in CHANGES.md"
+    return rows
+
+
+def _hier_values_per_sync(expr: str, k: int, m: int) -> float:
+    """Evaluate a hierarchical-table expression ('(2(M−1)/M + 1)·P',
+    'h·P/M', …): M = nodes/pod, h = cross-pod hops (1 at K=2, else 2)."""
+    import re
+    s = expr.replace("·", "*").replace("−", "-")
+    s = re.sub(r"(?<=[0-9MPh\)])(?=[MPh\(])", "*", s)
+    return float(eval(s, {"__builtins__": {}},
+                      {"M": m, "P": 1.0, "h": 1.0 if k == 2 else 2.0}))
+
+
 def test_cost_model_drift_gate():
     """The documented schedule table IS the cost model: re-derive every row
     (topology × merge × wire, at several N) from `comms.pick_schedule` and
@@ -238,6 +271,57 @@ def test_cost_model_drift_gate():
                     if got.wire_dtype == "int8":
                         want += v / got.wire_block * 4.0
                     assert got.bytes_per_sync(p) == pytest.approx(want)
+
+    # -- two-level (pod, node) meshes: the hierarchical table -----------------
+    htable = {}
+    for topo, merges, wires, sched, intra, cross, coll in \
+            _parse_hier_schedule_table():
+        for m in merges:
+            for wd in wires:
+                assert (topo, m, wd) not in htable, ("duplicate hier row",
+                                                     topo, m, wd)
+                htable[(topo, m, wd)] = (sched, intra, cross, coll)
+    p = 1 << 18
+    for k, mm in ((2, 2), (2, 4), (4, 4)):
+        n = k * mm
+        for topo in ("full", "ring", "dynamic"):
+            for m in ("mean", "fedavg", "fisher", "gradmatch"):
+                for wd in ("f32", "bf16", "int8"):
+                    key = (topo, m, wd)
+                    # dominant cross-pod cost: the hier row must win exactly
+                    # where the table has one
+                    got = comms.pick_schedule(
+                        _cfg(n_nodes=n, topology=topo, merge=m, wire_dtype=wd,
+                             cross_pod_cost=50.0), mesh_shape=(k, mm))
+                    if key in htable:
+                        sched, intra, cross, coll = htable[key]
+                        assert got.name == sched, (key, k, mm, got.name)
+                        assert got.collective == coll, (key, got.collective)
+                        assert got.intra_factor == pytest.approx(
+                            _hier_values_per_sync(intra, k, mm)), (key, k, mm)
+                        assert got.cross_factor == pytest.approx(
+                            _hier_values_per_sync(cross, k, mm)), (key, k, mm)
+                        # intra legs move f32; the cross leg is the int8 EF
+                        # wire with its documented per-block scale overhead
+                        b = got.bytes_by_link_class(p)
+                        assert b["intra"] == pytest.approx(
+                            got.intra_factor * p * 4.0)
+                        assert b["cross"] == pytest.approx(
+                            got.cross_factor * p * (1 + 4.0 / got.wire_block))
+                    else:
+                        # no hierarchical form exists for this key: however
+                        # costly the DCN hop, the picker stays on the flat
+                        # table row — priced 100% cross-pod on the 2-D mesh
+                        assert got.name == table[key][0], (key, k, mm,
+                                                           got.name)
+                        assert got.cross_factor == got.payload_factor
+        # neutral link costs: flat wins even where a hier row is offered
+        # (it moves fewer total bytes) — the other pick direction
+        for m, wd in (("fedavg", "int8"), ("fisher", "int8")):
+            got = comms.pick_schedule(
+                _cfg(n_nodes=n, topology="ring", merge=m, wire_dtype=wd),
+                mesh_shape=(k, mm))
+            assert got.name == table[("ring", m, wd)][0], (k, mm, got.name)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,300 @@
+"""Hierarchical two-level swarm comms (ISSUE 7): pod-delegate q8 schedules.
+
+All checks need >1 device arranged as a 2x2 ("pod", "node") mesh, so they
+run in ONE subprocess with XLA_FLAGS forcing 4 host devices (same pattern as
+test_mesh_wire_spmd), each printing an ``OK <tag>`` marker the tests assert
+on. Pins the acceptance criteria:
+
+  * the hierarchical fedavg/fisher pod-delegate schedules settle to their
+    numpy oracles (intra-pod weighted reduce -> delegate int8 EF pod ring ->
+    Wp mix -> intra-pod gather), raw and through the full gated session,
+  * `pick_schedule` selects hierarchical iff the configured cross-pod
+    per-byte cost dominates (both directions; 1-D meshes never offer it),
+  * HLO-measured cross-pod bytes of hierarchical int8 fedavg are <= 0.35x
+    the flat ring-q8 schedule, and match the per-link-class prediction,
+  * the per-pod EF residual pytree checkpoints bit-identically and restored
+    leaves are re-placed onto the 2-D NamedSharding templates,
+  * flat q8 schedules keep running unchanged over the joint axis tuple.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.spmd
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+_CHECKS = """
+import os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import SwarmConfig
+from repro.core import comms, gossip
+from repro.core.engine import SwarmEngine
+from repro.core.session import SwarmSession
+from repro.core.topology import ring_matrix
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_two_level_swarm_mesh
+
+mesh, axis = make_two_level_swarm_mesh(2, 2)
+K, PER, N, WB = 2, 2, 4, 128
+rng = np.random.default_rng(0)
+Wp = jnp.asarray(ring_matrix(K, 0.7), jnp.float32)   # asymmetric pod mixing
+
+# --- raw hierarchical schedules settle to their numpy oracles -------------
+# D=700 is NOT a multiple of the per_pod*wire_block delegate grid (256), so
+# the pad/unpad path is exercised.
+Dp = 700
+w0p = jnp.asarray(rng.normal(0, 1, (N, Dp)), jnp.float32)
+xp = {"w": w0p}
+fishp = {"w": jnp.asarray(np.abs(rng.normal(1, 0.3, (N, Dp))), jnp.float32)}
+wvec = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+
+def pod_mix(vals):  # [K, D] pod aggregates -> [N, D] per-node outputs
+    out = np.asarray(Wp) @ np.asarray(vals)
+    return np.repeat(out, PER, axis=0)
+
+wnp, th = np.asarray(wvec), np.asarray(w0p)
+favg = np.stack([(wnp[:2] @ th[:2]) / wnp[:2].sum(),
+                 (wnp[2:] @ th[2:]) / wnp[2:].sum()])
+fedavg_want = pod_mix(favg)
+fnp, eps = np.asarray(fishp["w"]), 1e-8
+num = np.stack([((fnp + eps) * th)[:2].sum(0), ((fnp + eps) * th)[2:].sum(0)])
+den = np.stack([(fnp + eps)[:2].sum(0), (fnp + eps)[2:].sum(0)])
+fisher_want = pod_mix(num) / np.maximum(pod_mix(den), 1e-30)
+
+cases = [
+    ("hier_fedavg_ring_q8", fedavg_want,
+     lambda w: gossip.hier_fedavg_ring_q8(xp, wvec, Wp, w, mesh, axis,
+                                          wire_block=WB)),
+    ("hier_fisher_ring_q8", fisher_want,
+     lambda w: gossip.hier_fisher_ring_q8(xp, fishp, Wp, w, mesh, axis,
+                                          wire_block=WB)),
+]
+for sched, want, fn in cases:
+    wire = gossip.init_mesh_wire(sched, xp, n_shards=N, wire_block=WB,
+                                 mesh_shape=(K, PER))
+    assert set(wire) == {"ref", "left"}, sched   # fwd-only ring at K=2
+    jfn = jax.jit(fn)
+    for _ in range(6):
+        merged, wire = jfn(wire)
+    err = np.abs(np.asarray(merged["w"]) - want).max()
+    assert err < 1e-5, (sched, err)
+print("OK hier_parity")
+
+# --- cost model picks hierarchical iff cross-pod cost dominates -----------
+for merge, flat_want, hier_want in [
+        ("fedavg", "ring_ppermute", "hier_fedavg_ring_q8"),
+        ("fisher", "ring_topo_ppermute", "hier_fisher_ring_q8")]:
+    for cross, want in [(1.0, flat_want), (5.0, flat_want),
+                        (6.0, hier_want), (10.0, hier_want)]:
+        cfg = SwarmConfig(n_nodes=N, topology="ring", merge=merge,
+                          lora_only=False, wire_dtype="int8", wire_block=WB,
+                          cross_pod_cost=cross)
+        eng = SwarmEngine(cfg, None, None, data_sizes=[1.0] * N,
+                          backend="gossip", mesh=mesh, axis=axis)
+        assert eng.sync_schedule.name == want, (merge, cross,
+                                                eng.sync_schedule.name)
+# a 1-D mesh never offers the hierarchical schedules, however costly DCN is
+flat_mesh = jax.make_mesh((4,), ("node",), devices=jax.devices()[:4])
+cfg1d = SwarmConfig(n_nodes=N, topology="ring", merge="fedavg",
+                    lora_only=False, wire_dtype="int8", wire_block=WB,
+                    cross_pod_cost=100.0)
+eng1d = SwarmEngine(cfg1d, None, None, data_sizes=[1.0] * N,
+                    backend="gossip", mesh=flat_mesh, axis="node")
+assert eng1d.sync_schedule.name == "ring_ppermute", eng1d.sync_schedule.name
+print("OK pick_directions")
+
+# --- session-level settled commit == numpy oracle on the 2x2 mesh ---------
+def id_step(p, o, b, s):
+    return p, o, {"loss": 0.0 * jnp.sum(p["w"])}
+
+def eval_fn(p, v):
+    return 1.0 - 0.0 * jnp.sum(p["w"])
+
+D = 1024                      # multiple of per_pod*WB: exact HLO byte math
+w0 = jnp.asarray(rng.normal(0, 1, (N, D)), jnp.float32)
+batches = jnp.zeros((1, N, 1))
+val = jnp.zeros((N, 1))
+sizes = [1.0, 2.0, 3.0, 4.0]
+
+def settled_commit(merge, want_sched):
+    mk = lambda thr: SwarmConfig(
+        n_nodes=N, sync_every=1, topology="ring", merge=merge,
+        lora_only=False, val_threshold=thr, self_weight=0.7,
+        wire_dtype="int8", wire_block=WB, cross_pod_cost=10.0)
+    kw = dict(params={"w": w0.copy()}, stacked=True, data_sizes=sizes,
+              backend="gossip", mesh=mesh, axis=axis)
+    sa = SwarmSession(mk(1.5), id_step, eval_fn, **kw)
+    assert sa.sync_schedule.name == want_sched, sa.sync_schedule.name
+    for _ in range(6):
+        out = sa.round(batches, val)
+        assert not np.asarray(out["gates"]).any()
+    sb = SwarmSession(mk(0.0), id_step, eval_fn, **kw)
+    sb.load_state(sa.state)
+    out = sb.round(batches, val)
+    assert np.asarray(out["gates"]).all()
+    return sb, np.asarray(sb.state.params["w"])
+
+snp, thd = np.asarray(sizes), np.asarray(w0)
+pavg = np.stack([(snp[:2] @ thd[:2]) / snp[:2].sum(),
+                 (snp[2:] @ thd[2:]) / snp[2:].sum()])
+sess_a, got = settled_commit("fedavg", "hier_fedavg_ring_q8")
+want = np.repeat(np.asarray(ring_matrix(K, 0.7)) @ pavg, PER, axis=0)
+err = np.abs(got - want).max()
+assert err < 1e-5, err
+# zero strategy stats -> eps floor -> uniform pod means, same Wp mix
+_, gotf = settled_commit("fisher", "hier_fisher_ring_q8")
+pmean = np.stack([thd[:2].mean(0), thd[2:].mean(0)])
+wantf = np.repeat(np.asarray(ring_matrix(K, 0.7)) @ pmean, PER, axis=0)
+errf = np.abs(gotf - wantf).max()
+assert errf < 1e-5, errf
+# the session surfaces the per-link-class prediction
+plb = sess_a.predicted_link_bytes
+assert plb["intra"] == 8 * D and plb["cross"] == 0.5 * D * (1 + 4 / WB), plb
+print("OK session_parity")
+
+# --- HLO bytes per link class: cross <= 0.35x flat ring q8 ----------------
+pod_of = hlo_stats.pod_device_map(K, PER)
+x = {"w": w0}
+wv4 = jnp.full((N,), 0.25, jnp.float32)
+hwire = gossip.init_mesh_wire("hier_fedavg_ring_q8", x, n_shards=N,
+                              wire_block=WB, mesh_shape=(K, PER))
+hfn = jax.jit(lambda t, w: gossip.hier_fedavg_ring_q8(
+    t, wv4, Wp, w, mesh, axis, wire_block=WB))
+hb = hlo_stats.collective_bytes_by_link(
+    hfn.lower(x, hwire).compile().as_text(), pod_of)
+W4 = jnp.asarray(ring_matrix(N, 0.5), jnp.float32)
+fwire = gossip.init_mesh_wire("ring_ppermute", x, n_shards=N, wire_block=WB)
+ffn = jax.jit(lambda t, w: gossip.ring_rows_gossip_q8(t, W4, w, mesh, axis,
+                                                      wire_block=WB))
+fb = hlo_stats.collective_bytes_by_link(
+    ffn.lower(x, fwire).compile().as_text(), pod_of)
+# flat ring ppermutes mix intra-pod and pod-spanning pairs in ONE
+# instruction -> the whole payload prices as cross (DCN-bound)
+assert fb["intra"] == 0 and fb["cross"] == 2 * D * 1 + 2 * (D // WB) * 4, fb
+# hier: cross is exactly the predicted delegate-chunk q+scale bytes ...
+assert hb["cross"] == D // 2 * 1 + (D // 2) // WB * 4, hb
+# ... intra is the psum + all_gather payload (within one small all-reduce
+# of the predicted 2*D f32: the scalar pod-mass reduction)
+pred = comms.pick_schedule(
+    SwarmConfig(n_nodes=N, topology="ring", merge="fedavg", lora_only=False,
+                wire_dtype="int8", wire_block=WB, cross_pod_cost=10.0),
+    mesh_shape=(K, PER)).bytes_by_link_class(D)
+assert hb["cross"] == pred["cross"], (hb, pred)
+assert abs(hb["intra"] - pred["intra"]) / pred["intra"] < 0.01, (hb, pred)
+ratio = hb["cross"] / fb["cross"]
+assert ratio <= 0.35, (hb, fb)
+print(f"OK hlo_link_bytes ratio={ratio:.3f}")
+
+# --- checkpoint: per-pod EF residual round-trips bit-identically ----------
+def decay_step(p, o, b, s):
+    return {"w": p["w"] * 0.999}, o, {"loss": 0.0 * jnp.sum(p["w"])}
+
+ccfg = SwarmConfig(n_nodes=N, sync_every=1, topology="ring", merge="fisher",
+                   lora_only=False, val_threshold=0.0, wire_dtype="int8",
+                   wire_block=WB, cross_pod_cost=10.0)
+ckw = dict(stacked=True, backend="gossip", mesh=mesh, axis=axis,
+           data_sizes=[1.0] * N)
+ref_sess = SwarmSession(ccfg, decay_step, eval_fn, params={"w": w0.copy()},
+                        **ckw)
+assert ref_sess.sync_schedule.name == "hier_fisher_ring_q8"
+for _ in range(4):
+    ref_sess.round(batches, val)
+s1 = SwarmSession(ccfg, decay_step, eval_fn, params={"w": w0.copy()}, **ckw)
+for _ in range(2):
+    s1.round(batches, val)
+path = os.path.join(tempfile.mkdtemp(), "hier_wire.msgpack")
+s1.save(path)
+s2 = SwarmSession(ccfg, decay_step, eval_fn, params={"w": w0.copy()}, **ckw)
+s2.round(batches, val)   # state leaves now carry the 2-D NamedSharding
+s2.load(path)
+# restored leaves are re-placed onto the 2-D NamedSharding templates
+for leaf in [s2.state.params["w"], s2.state.wire["ref"]["num"]["w"]]:
+    sh = leaf.sharding
+    assert isinstance(sh, jax.sharding.NamedSharding), sh
+    assert set(sh.mesh.axis_names) == {"pod", "node"}, sh
+# ... bit-identically
+for a, b in zip(jax.tree.leaves(s2.state.wire),
+                jax.tree.leaves(s1.state.wire)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+for _ in range(2):
+    s2.round(batches, val)
+np.testing.assert_array_equal(np.asarray(s2.state.params["w"]),
+                              np.asarray(ref_sess.state.params["w"]))
+for a, b in zip(jax.tree.leaves(s2.state.wire),
+                jax.tree.leaves(ref_sess.state.wire)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK hier_checkpoint")
+
+# --- flat schedules still run over the joint ("pod", "node") axis ---------
+want_flat = np.asarray(W4) @ np.asarray(w0)
+wire = gossip.init_mesh_wire("ring_ppermute", x, n_shards=N, wire_block=WB)
+jfn = jax.jit(lambda w: gossip.ring_rows_gossip_q8(x, W4, w, mesh, axis,
+                                                   wire_block=WB))
+for _ in range(6):
+    merged, wire = jfn(wire)
+assert np.abs(np.asarray(merged["w"]) - want_flat).max() < 1e-5
+print("OK flat_on_two_level")
+"""
+
+
+@pytest.fixture(scope="module")
+def spmd_out():
+    return _run(_CHECKS)  # module scope: the subprocess runs once
+
+
+def test_hier_schedules_match_numpy_oracles(spmd_out):
+    """Raw hierarchical fedavg/fisher settle to the pod-aggregate + Wp-mix
+    numpy oracle <= 1e-5 on a payload that exercises the delegate-grid
+    padding path; the K=2 wire is forward-only ({"ref", "left"})."""
+    assert "OK hier_parity" in spmd_out
+
+
+def test_pick_schedule_cross_cost_both_directions(spmd_out):
+    """Hierarchical is picked iff cross_pod_cost dominates (flat at <= 5x,
+    hierarchical at >= 6x for wire_block=128), for both merges, end-to-end
+    through SwarmEngine; a 1-D mesh never offers hierarchical."""
+    assert "OK pick_directions" in spmd_out
+
+
+def test_session_committed_parity_on_two_level_mesh(spmd_out):
+    """backend="gossip" on the 2x2 mesh with dominant cross-pod cost: the
+    gated session commits params <= 1e-5 of the numpy oracle after EF
+    settling, and surfaces the per-link-class byte prediction — the
+    headline acceptance check."""
+    assert "OK session_parity" in spmd_out
+
+
+def test_hier_cross_pod_bytes_shrink(spmd_out):
+    """HLO-measured cross-pod bytes of hierarchical int8 fedavg <= 0.35x
+    flat ring-q8 (flat pod-spanning ppermutes price entirely as cross), and
+    the measured intra/cross split matches SyncSchedule.bytes_by_link_class."""
+    assert "OK hlo_link_bytes" in spmd_out
+
+
+def test_hier_wire_checkpoint_and_resharding(spmd_out):
+    """session.save/restore round-trips the per-pod EF residual pytree
+    bit-identically, re-places restored leaves onto the 2-D NamedSharding
+    templates, and resumed training matches never-stopping (ISSUE 7
+    satellite)."""
+    assert "OK hier_checkpoint" in spmd_out
+
+
+def test_flat_schedules_run_over_axis_tuple(spmd_out):
+    """The flat ring q8 schedule is unchanged on the two-level mesh: the
+    joint ("pod", "node") axis tuple behaves as one 4-way gossip axis."""
+    assert "OK flat_on_two_level" in spmd_out
