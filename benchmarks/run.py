@@ -38,6 +38,10 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
                     (subprocess): wall time + HLO-measured bytes split per
                     link class (intra-pod vs cross-pod) next to the cost
                     model's per-class prediction
+  serve             serving plane (PR 8): continuous batching vs naive
+                    one-request-at-a-time dispatch × consensus/average
+                    ensemble modes — requests/sec, p99 latency and timed-
+                    region retrace counts, written to BENCH_serve.json
 
 ``--smoke`` runs a seconds-scale subset (tiny shapes, no cached experiment
 protocol) so CI can exercise every benchmark entry point; a tier-1 test
@@ -66,13 +70,15 @@ BENCH_SYNC_JSON = os.path.join(_ROOT, "BENCH_swarm_sync.json")
 # never read-modify-write the committed perf-trajectory artifact (machine-
 # local timings would dirty the tree on every test run)
 BENCH_SCRATCH_JSON = os.path.join(_ROOT, ".bench", "BENCH_swarm_sync.json")
+BENCH_SERVE_JSON = os.path.join(_ROOT, "BENCH_serve.json")
 
 
-def _bench_json_update(section: str, data, smoke: bool = False) -> str:
-    """Merge one section into the machine-readable BENCH_swarm_sync.json
-    (the committed file for explicit full runs, the ``.bench/`` scratch
-    copy for --smoke)."""
-    path = os.path.abspath(BENCH_SCRATCH_JSON if smoke else BENCH_SYNC_JSON)
+def _bench_json_update(section: str, data, smoke: bool = False,
+                       filename: str = "BENCH_swarm_sync.json") -> str:
+    """Merge one section into a machine-readable BENCH json (the committed
+    file for explicit full runs, the ``.bench/`` scratch copy for --smoke)."""
+    path = os.path.abspath(os.path.join(_ROOT, ".bench", filename) if smoke
+                           else os.path.join(_ROOT, filename))
     os.makedirs(os.path.dirname(path), exist_ok=True)
     doc = {}
     if os.path.exists(path):
@@ -811,6 +817,91 @@ def hier_sync_smoke():
     hier_sync(smoke=True)
 
 
+# ---------------------------------------------------------------------------
+# serve — continuous-batching consensus inference (PR 8)
+# ---------------------------------------------------------------------------
+
+_SERVE_CONFIGS = {
+    # naive: one request at a time, the pre-PR-8 dispatch discipline
+    "naive_b1": dict(max_slots=1, batch_buckets=(1,)),
+    # continuous batching: up to 8 co-resident requests, bucketed table
+    "continuous_b8": dict(max_slots=8, batch_buckets=(1, 2, 4, 8)),
+}
+
+
+def serve(smoke: bool = False):
+    """Requests/sec + p99 latency for batching config × consensus mode over
+    a 4-node vmapped ensemble; writes BENCH_serve.json. The full bucket grid
+    is warmed before t0 and the timed region asserts zero retraces — the
+    comparison is dispatch discipline, not compile noise."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import build_model
+    from repro.serve import BucketPolicy, ServeEngine
+
+    cfg = smoke_variant(get_config("minicpm-2b")).replace(vocab_size=256)
+    model = build_model(cfg)
+    n_nodes = 4
+    params = jax.vmap(model.init)(
+        jax.random.split(jax.random.key(0), n_nodes))
+    n_requests, max_new = (8, 8) if smoke else (32, 16)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in rng.integers(4, 16, size=n_requests)]
+
+    rows, tput = [], {}
+    for config, knobs in _SERVE_CONFIGS.items():
+        for mode in ("consensus", "average"):
+            eng = ServeEngine(
+                model, params, mode=mode, max_len=48,
+                max_slots=knobs["max_slots"],
+                policy=BucketPolicy(batch_buckets=knobs["batch_buckets"],
+                                    seq_buckets=(16,)))
+            # warm every (batch, seq) bucket the timed run will touch
+            for p in prompts[:min(8, n_requests)]:
+                eng.submit(p, max_new=2)
+            eng.drain()
+            warm_traces = eng.total_traces
+            t0 = time.perf_counter()
+            for p in prompts:
+                eng.submit(p, max_new=max_new)
+            done = eng.drain()
+            wall = time.perf_counter() - t0
+            lat_ms = np.array([r.latency_s for r in done]) * 1e3
+            new_tokens = sum(len(r.node_tokens) for r in done)
+            row = {
+                "config": config, "mode": mode,
+                "max_slots": knobs["max_slots"],
+                "batch_buckets": list(knobs["batch_buckets"]),
+                "n_nodes": n_nodes, "n_requests": len(done),
+                "max_new": max_new, "wall_s": wall,
+                "requests_per_s": len(done) / wall,
+                "tokens_per_s": new_tokens / wall,
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99)),
+                "retraces_timed": eng.total_traces - warm_traces,
+            }
+            rows.append(row)
+            tput[config, mode] = row["requests_per_s"]
+            print(f"serve_{config}_{mode},{wall / len(done) * 1e6:.0f},"
+                  f"req_s={row['requests_per_s']:.2f};"
+                  f"p99_ms={row['p99_ms']:.1f};"
+                  f"retraces={row['retraces_timed']}")
+    ratios = {mode: tput["continuous_b8", mode] / tput["naive_b1", mode]
+              for mode in ("consensus", "average")}
+    for mode, r in ratios.items():
+        print(f"serve_continuous_vs_naive_{mode},0,{r:.2f}")
+    data = {"model": "minicpm-2b (smoke variant, vocab 256)",
+            "n_nodes": n_nodes, "n_requests": n_requests, "max_new": max_new,
+            "rows": rows, "continuous_over_naive_throughput": ratios}
+    path = _bench_json_update("serve_smoke" if smoke else "serve", data,
+                              smoke=smoke, filename="BENCH_serve.json")
+    print(f"serve_json,0,{path}")
+
+
+def serve_smoke():
+    serve(smoke=True)
+
+
 def merge_kernel_smoke():
     merge_kernel(1 << 14)
 
@@ -823,13 +914,13 @@ ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
        sync_roundtrip, engine_roundtrip, overlap_roundtrip,
        dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity,
-       mesh_wire, hier_sync]
+       mesh_wire, hier_sync, serve]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
          engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
          spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke,
-         mesh_wire_smoke, hier_sync_smoke]
+         mesh_wire_smoke, hier_sync_smoke, serve_smoke]
 
 
 def roofline_table():

@@ -557,6 +557,11 @@ class TraceHazardRule(Rule):
 # ---------------------------------------------------------------------------
 
 _HOT_ENTRY_RE = re.compile(r"(^|_)(round|rounds|local)(_|$|s$)")
+# serving plane (PR 8): decode/prefill/commit/swap-named jit entries mutate
+# the slot cache table every tick — an undonated entry copies the whole
+# ensemble KV cache per token
+_SERVE_ENTRY_RE = re.compile(r"(^|_)(decode|prefill|commit|swap)(_|$)")
+_SERVE_PREFIX = "src/repro/serve/"
 _DONATE_KWS = {"donate_argnums", "donate_argnames"}
 
 
@@ -565,18 +570,25 @@ class DonationRule(Rule):
     id = "SWL003"
     severity = "error"
     summary = ("jitted round/run_rounds-class entry points in core/engine.py "
-               "and core/session.py must declare donate_argnums")
+               "and core/session.py — and decode/prefill/commit-class entries "
+               "in src/repro/serve/ — must declare donate_argnums")
 
     _TARGETS = ("src/repro/core/engine.py", "src/repro/core/session.py")
 
     def applies(self, module: Module) -> bool:
-        return module.rel in self._TARGETS
+        return (module.rel in self._TARGETS
+                or module.rel.startswith(_SERVE_PREFIX))
 
     def check(self, module: Module, ctx: LintContext) -> List[Finding]:
         out: List[Finding] = []
+        hot_re = (_SERVE_ENTRY_RE if module.rel.startswith(_SERVE_PREFIX)
+                  else _HOT_ENTRY_RE)
+
+        klass = ("serve decode/commit-class" if module.rel.startswith(
+            _SERVE_PREFIX) else "round-class")
 
         def hot(name: Optional[str]) -> bool:
-            return bool(name) and bool(_HOT_ENTRY_RE.search(name))
+            return bool(name) and bool(hot_re.search(name))
 
         for node in ast.walk(module.tree):
             if isinstance(node, ast.Call) and _dotted(node.func) in (
@@ -588,9 +600,9 @@ class DonationRule(Rule):
                                           for k in node.keywords):
                     out.append(Finding(
                         module.path, node.lineno, self.id, self.severity,
-                        f"jax.jit({tname}) is a round-class hot path but "
-                        "declares no donate_argnums — params/opt-state "
-                        "buffers will be copied every round"))
+                        f"jax.jit({tname}) is a {klass} hot path but "
+                        "declares no donate_argnums — its state buffers "
+                        "will be copied on every call"))
             elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 for dec in node.decorator_list:
                     donated = False
@@ -610,7 +622,7 @@ class DonationRule(Rule):
                     if is_jit and hot(node.name) and not donated:
                         out.append(Finding(
                             module.path, node.lineno, self.id, self.severity,
-                            f"@jit on round-class '{node.name}' without "
+                            f"@jit on {klass} '{node.name}' without "
                             "donate_argnums"))
         return out
 

@@ -428,3 +428,29 @@ class SwarmSession:
         """Build a session (constructor kwargs supply the param template)
         and restore the checkpointed state into it."""
         return cls(cfg, train_step_fn, eval_fn, **kwargs).load(path)
+
+
+def load_checkpoint_params(path: str, params_template, *,
+                           expect_nodes: Optional[int] = None):
+    """Serving-plane ingest surface: read ONLY the stacked per-node params
+    out of a full :meth:`SwarmSession.save` checkpoint.
+
+    ``params_template`` is a stacked params pytree (leading node axis N)
+    with the target shapes/dtypes/shardings — normally the serving
+    ensemble's current live params. ``load_pytree`` restores by flattened
+    key, so a params-only ``SwarmState`` template skips the checkpoint's
+    opt state, merge stats, wire state and counters without materializing
+    them. ``expect_nodes`` cross-checks the checkpoint cfg's ``n_nodes``
+    so a serving ensemble can't silently ingest a differently-sized swarm.
+    """
+    meta = load_metadata(path)
+    saved_cfg = meta.get("cfg", {})
+    if (expect_nodes is not None and "n_nodes" in saved_cfg
+            and saved_cfg["n_nodes"] != expect_nodes):
+        raise ValueError(
+            f"checkpoint has n_nodes={saved_cfg['n_nodes']}, the serving "
+            f"ensemble expects {expect_nodes}")
+    template = SwarmState(params=params_template, opt_state=None, stats=None,
+                          wire=None, active=None, rng=None, round=None,
+                          step=None)
+    return load_pytree(path, template).params

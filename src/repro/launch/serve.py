@@ -1,10 +1,18 @@
-"""Serving: batched greedy decode against a sharded KV cache / SSM state.
+"""Serving primitives: batched greedy decode against a sharded KV cache / SSM state.
 
 ``make_serve_step`` is what the decode input shapes (decode_32k, long_500k)
 lower in the dry-run: ONE new token per sequence against a seq_len-deep cache.
+``make_logits_step`` is the raw-logits form the continuous-batching consensus
+engine (``repro.serve``) vmaps over nodes and slots.
+
+Jitted forms are cached per :class:`~repro.models.Model` (a frozen, hashable
+bundle) via ``serve_step_for`` / ``prefill_step_for`` — ``generate`` used to
+call ``jax.jit(make_serve_step(model))`` inside its body, discarding the
+compile cache on every invocation.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -13,11 +21,28 @@ import jax.numpy as jnp
 from repro.models import Model
 
 
+def make_logits_step(model: Model) -> Callable:
+    """(params, tokens [B,S], caches, cache_pos) -> (logits [B,S,V], caches).
+
+    The raw decode primitive: one forward against the cache, no sampling.
+    With S > 1 and cache_pos = 0 this doubles as prefill for position-indexed
+    cache families (attention writes tokens 0..S-1 in place and the causal
+    mask hides everything at or past the query position), which is how the
+    serve engine keeps a single traced core for both phases.
+    """
+
+    def logits_step(params, tokens, caches, cache_pos):
+        return model.decode(params, tokens, caches, cache_pos)
+
+    return logits_step
+
+
 def make_serve_step(model: Model) -> Callable:
     """(params, tokens [B,1], caches, cache_pos) -> (next_tokens [B,1], caches)."""
+    logits_step = make_logits_step(model)
 
     def serve_step(params, tokens, caches, cache_pos):
-        logits, caches = model.decode(params, tokens, caches, cache_pos)
+        logits, caches = logits_step(params, tokens, caches, cache_pos)
         next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return next_tokens, caches
 
@@ -33,14 +58,26 @@ def make_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
+@functools.lru_cache(maxsize=None)
+def serve_step_for(model: Model) -> Callable:
+    """Jitted ``make_serve_step``, cached per Model instance — params and
+    caches are per-call arguments, so the cache holds no array state."""
+    return jax.jit(make_serve_step(model))
+
+
+@functools.lru_cache(maxsize=None)
+def prefill_step_for(model: Model) -> Callable:
+    return jax.jit(make_prefill_step(model))
+
+
 def generate(model: Model, params, prompt_tokens, max_new: int, max_len: int):
     """Host-loop generation (examples/serving demo)."""
     b, s = prompt_tokens.shape
     caches = model.init_cache(b, max_len)
-    serve_step = jax.jit(make_serve_step(model))
+    serve_step = serve_step_for(model)
     if model.prefill is not None:
-        logits, caches = model.prefill(params, {"tokens": prompt_tokens}, caches)
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        tok, caches = prefill_step_for(model)(
+            params, {"tokens": prompt_tokens}, caches)
     else:  # encdec and others: feed prompt token-by-token
         tok = prompt_tokens[:, :1]
         for i in range(s):

@@ -1,0 +1,16 @@
+"""Production serving plane (PR 8): continuous-batching consensus inference
+over swarm-trained ensembles with zero-downtime checkpoint hot-swap.
+
+The N per-node variants in ``SwarmState.params`` are served directly as one
+vmapped ensemble; ``core.session.load_checkpoint_params`` is the ingest
+surface from a training swarm's ``session.save`` checkpoints. See
+docs/serving.md for the request lifecycle, bucket policy, consensus modes
+and the hot-swap protocol.
+"""
+from repro.serve.batcher import BucketPolicy
+from repro.serve.engine import AGG_MODES, ServeEngine, aggregate_logits
+from repro.serve.hot_swap import HotSwapSlot
+from repro.serve.queue import Request, RequestQueue
+
+__all__ = ["AGG_MODES", "BucketPolicy", "HotSwapSlot", "Request",
+           "RequestQueue", "ServeEngine", "aggregate_logits"]

@@ -1,0 +1,332 @@
+"""Continuous-batching consensus engine: the serving plane's core.
+
+Architecture
+------------
+* **Slot model.** The engine owns a table of up to ``max_slots`` decode
+  slots. Each live slot is one in-flight request: a lane in the stacked
+  cache, a position counter, and a pinned param version. ``step()`` is one
+  host-side scheduler tick: admit pending requests into free slots (one
+  bucketed prefill dispatch each), then advance every live slot one token
+  with a single batched decode dispatch. Requests at different depths
+  coexist because every lane carries its own ``cache_pos``.
+* **Bucketed shapes.** Dispatch shapes come from :class:`BucketPolicy`:
+  prompts right-pad to a seq bucket, the slot table grows/shrinks across
+  batch buckets — so each jitted entry compiles once per bucket, ever
+  (``trace_counts`` is keyed by (kind, shape) and tests pin zero retraces
+  across hot-swaps and steady-state serving).
+* **Vmapped ensemble.** The N per-node variants in ``SwarmState.params``
+  are served as one double-vmapped forward — outer vmap over nodes (params
+  + cache axis 0), inner vmap over slots (cache axis 1, per-lane
+  ``cache_pos``) — built from the ``launch.serve.make_logits_step``
+  primitive, with traced aggregation (:func:`aggregate_logits`) choosing
+  the token every node continues with.
+* **Hot swap.** Params live in a :class:`~repro.serve.hot_swap.HotSwapSlot`.
+  Each request decodes under the version it was admitted with; during a
+  transition the tick issues one decode dispatch per live version (same
+  compiled step — params are an argument), and superseded buffers are
+  retired once their last request drains. No request is ever dropped or
+  served a mix of versions.
+
+Both jitted entries donate the cache table (arg 1): the slot caches are
+mutated in place tick over tick, never copied (swarmlint SWL003's serve
+scope pins this).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import make_logits_step
+from repro.models import Model
+from repro.serve.batcher import BucketPolicy
+from repro.serve.hot_swap import HotSwapSlot
+from repro.serve.queue import Request, RequestQueue
+
+AGG_MODES = ("consensus", "average", "per_node", "topk")
+
+
+def aggregate_logits(logits, mode: str, top_k: int = 2):
+    """Traced ensemble aggregation: per-node logits [N, B, V] -> the next
+    token each node continues with, [N, B] int32.
+
+    consensus
+        Majority vote over per-node argmaxes; ties break toward the
+        candidate with the highest mean probability (the fractional
+        tie-break term is < 1 vote, so a strict majority always wins).
+    average
+        Argmax of the mean per-node softmax (probability-space averaging).
+    topk
+        Like ``average``, but only the ``top_k`` most confident nodes
+        (highest max-probability) vote in each slot.
+    per_node
+        No aggregation: every node decodes its own stream — the per-site
+        diversity view (N divergent sequences per request).
+    """
+    n, b, v = logits.shape
+    if mode == "per_node":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # [N, B, V]
+    if mode == "consensus":
+        votes = jax.nn.one_hot(jnp.argmax(logits, -1), v)         # [N, B, V]
+        score = votes.sum(0) + probs.mean(0) / (n + 1.0)
+        winner = jnp.argmax(score, -1)                            # [B]
+    elif mode == "average":
+        winner = jnp.argmax(probs.mean(0), -1)
+    elif mode == "topk":
+        conf = probs.max(-1)                                      # [N, B]
+        _, idx = jax.lax.top_k(conf.T, top_k)                     # [B, k]
+        sel = jnp.take_along_axis(
+            jnp.moveaxis(probs, 0, 1), idx[..., None], axis=1)    # [B, k, V]
+        winner = jnp.argmax(sel.mean(1), -1)
+    else:
+        raise ValueError(f"unknown aggregation mode {mode!r}; "
+                         f"expected one of {AGG_MODES}")
+    return jnp.broadcast_to(winner[None], (n, b)).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Continuous-batching ensemble server over stacked per-node params.
+
+    Parameters
+    ----------
+    model : the (single-node) Model bundle; decode must be position-indexed
+        (attention families) for padded prefill — see docs/serving.md.
+    params : stacked params with leading node axis N (``SwarmState.params``
+        layout), or a :class:`HotSwapSlot` already wrapping them.
+    mode : aggregation mode, one of ``AGG_MODES`` (static per engine — each
+        mode is its own compiled program).
+    max_len : cache depth per slot; prompt_len + max_new must fit.
+    max_slots : concurrency ceiling (≤ the largest batch bucket);
+        ``max_slots=1`` with ``batch_buckets=(1,)`` is the naive
+        one-request-at-a-time baseline the benchmarks compare against.
+    """
+
+    def __init__(self, model: Model, params, *, mode: str = "consensus",
+                 top_k: int = 2, max_len: int = 64, max_slots: int = 8,
+                 policy: Optional[BucketPolicy] = None,
+                 now=time.perf_counter):
+        if mode not in AGG_MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected {AGG_MODES}")
+        self.model = model
+        self.mode = mode
+        self.top_k = int(top_k)
+        self.max_len = int(max_len)
+        self.max_slots = int(max_slots)
+        self.policy = policy if policy is not None else BucketPolicy()
+        if self.max_slots > self.policy.batch_buckets[-1]:
+            raise ValueError(
+                f"max_slots={self.max_slots} exceeds the largest batch "
+                f"bucket {self.policy.batch_buckets[-1]}")
+        self.slot = params if isinstance(params, HotSwapSlot) \
+            else HotSwapSlot(params)
+        self.n_nodes = int(jax.tree_util.tree_leaves(self.slot.live)[0].shape[0])
+        self._logits_step = make_logits_step(model)
+        self._now = now
+        self.queue = RequestQueue(now=now)
+        self.completed: List[Request] = []
+        # (kind, shape) -> number of traces; the python bodies below run only
+        # at trace time, so steady-state serving and hot-swaps keep these flat
+        self.trace_counts = collections.defaultdict(int)
+        self._decode_commit = jax.jit(self._decode_commit_impl,
+                                      donate_argnums=(1,))
+        self._prefill_commit = jax.jit(self._prefill_commit_impl,
+                                       donate_argnums=(1,))
+        self._bucket = self.policy.batch_buckets[0]
+        self._caches = self._init_caches(self._bucket)
+        self._pos = np.zeros(self._bucket, np.int32)
+        self._live = np.zeros(self._bucket, bool)
+        self._pinned = np.zeros(self._bucket, np.int64)
+        self._tokens = np.zeros((self.n_nodes, self._bucket), np.int32)
+        self._reqs: List[Optional[Request]] = [None] * self._bucket
+
+    # -- jitted cores -------------------------------------------------------
+
+    def _decode_commit_impl(self, params, caches, tokens, pos, live):
+        """One batched ensemble decode tick: tokens [N,B], pos [B], live [B]
+        -> (aggregated next tokens [N,B], caches with live lanes advanced)."""
+        self.trace_counts["decode", tokens.shape[1]] += 1
+
+        def slot_step(p, tok, cache, q):
+            logits, new = self._logits_step(p, tok[None, None], cache, q)
+            return logits[0, -1], new
+
+        def node_step(p, toks, node_caches):
+            return jax.vmap(slot_step, in_axes=(None, 0, 0, 0))(
+                p, toks, node_caches, pos)
+
+        logits, new_caches = jax.vmap(node_step)(params, tokens, caches)
+        nxt = aggregate_logits(logits, self.mode, self.top_k)
+
+        def commit(old, new):
+            mask = live.reshape((1, live.shape[0]) + (1,) * (new.ndim - 2))
+            return jnp.where(mask, new, old)
+
+        return nxt, jax.tree.map(commit, caches, new_caches)
+
+    def _prefill_commit_impl(self, params, caches, prompt, slot, length):
+        """Ensemble prefill of ONE slot: padded prompt [S] -> per-node first
+        tokens [N]; the slot's cache lane is replaced in place."""
+        table = jax.tree_util.tree_leaves(caches)[0].shape[1]
+        self.trace_counts["prefill", prompt.shape[0], table] += 1
+
+        def node_prefill(p):
+            fresh = self.model.init_cache(1, self.max_len)
+            logits, cache = self._logits_step(p, prompt[None], fresh,
+                                              jnp.int32(0))
+            return logits[0, length - 1], cache
+
+        logits, slot_cache = jax.vmap(node_prefill)(params)
+        first = aggregate_logits(logits[:, None, :], self.mode,
+                                 self.top_k)[:, 0]
+        caches = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new, slot, axis=1),
+            caches, slot_cache)
+        return first, caches
+
+    # -- slot-table plumbing ------------------------------------------------
+
+    def _init_caches(self, b: int):
+        """Stacked slot caches: leaves [N, b, *single-slot cache dims]."""
+        one = self.model.init_cache(1, self.max_len)
+        return jax.tree.map(
+            lambda leaf: jnp.zeros((self.n_nodes, b) + leaf.shape, leaf.dtype),
+            one)
+
+    def _grow(self, nb: int) -> None:
+        pad = nb - self._bucket
+        self._caches = jax.tree.map(
+            lambda c: jnp.concatenate(
+                [c, jnp.zeros(c.shape[:1] + (pad,) + c.shape[2:], c.dtype)],
+                axis=1),
+            self._caches)
+        self._pos = np.concatenate([self._pos, np.zeros(pad, np.int32)])
+        self._live = np.concatenate([self._live, np.zeros(pad, bool)])
+        self._pinned = np.concatenate([self._pinned, np.zeros(pad, np.int64)])
+        self._tokens = np.concatenate(
+            [self._tokens, np.zeros((self.n_nodes, pad), np.int32)], axis=1)
+        self._reqs.extend([None] * pad)
+        self._bucket = nb
+
+    def _maybe_shrink(self) -> None:
+        b0 = self.policy.batch_buckets[0]
+        if self._bucket == b0 or self._live.any() or len(self.queue):
+            return
+        self._caches = jax.tree.map(lambda c: c[:, :b0], self._caches)
+        self._pos = self._pos[:b0].copy()
+        self._live = self._live[:b0].copy()
+        self._pinned = self._pinned[:b0].copy()
+        self._tokens = self._tokens[:, :b0].copy()
+        self._reqs = self._reqs[:b0]
+        self._bucket = b0
+
+    # -- public API ---------------------------------------------------------
+
+    @property
+    def live_count(self) -> int:
+        return int(self._live.sum())
+
+    @property
+    def total_traces(self) -> int:
+        return sum(self.trace_counts.values())
+
+    def submit(self, prompt, max_new: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.policy.seq_bucket(prompt.size)   # must fit a bucket
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds the "
+                f"cache depth max_len={self.max_len}")
+        return self.queue.submit(prompt, max_new)
+
+    def swap(self, params) -> int:
+        """Publish a new stacked ensemble; in-flight requests finish on the
+        version they were admitted with."""
+        return self.slot.publish(params)
+
+    def ingest_checkpoint(self, path: str) -> int:
+        """Hot-swap in the params of a ``SwarmSession.save`` checkpoint."""
+        return self.slot.ingest(path, expect_nodes=self.n_nodes)
+
+    def step(self) -> List[Request]:
+        """One scheduler tick: admit -> decode -> harvest. Returns the
+        requests that completed this tick."""
+        done: List[Request] = []
+        self._admit(done)
+        if self._live.any():
+            self._decode_tick(done)
+        self.slot.retire(self._pinned[self._live].tolist())
+        self._maybe_shrink()
+        self.completed.extend(done)
+        return done
+
+    def drain(self, max_ticks: int = 100_000) -> List[Request]:
+        """Tick until the queue and all slots are empty."""
+        done: List[Request] = []
+        while len(self.queue) or self._live.any():
+            if max_ticks <= 0:
+                raise RuntimeError("drain did not converge")
+            max_ticks -= 1
+            done.extend(self.step())
+        return done
+
+    # -- scheduler ----------------------------------------------------------
+
+    def _admit(self, done: List[Request]) -> None:
+        while len(self.queue):
+            if self.live_count >= self.max_slots:
+                break
+            free = np.flatnonzero(~self._live)
+            if free.size == 0:
+                self._grow(self.policy.batch_bucket(self.live_count + 1))
+                free = np.flatnonzero(~self._live)
+            self._start(self.queue.pop(), int(free[0]), done)
+
+    def _start(self, req: Request, slot: int, done: List[Request]) -> None:
+        padded, length = self.policy.pad_prompt(req.prompt)
+        version = self.slot.version
+        first, self._caches = self._prefill_commit(
+            self.slot.buffer(version), self._caches, jnp.asarray(padded),
+            jnp.int32(slot), jnp.int32(length))
+        first = np.asarray(first)                                 # [N]
+        req.param_version = version
+        req.admit_t = self._now()
+        req.node_tokens.append(first)
+        self._reqs[slot] = req
+        self._live[slot] = True
+        self._pinned[slot] = version
+        self._pos[slot] = length
+        self._tokens[:, slot] = first
+        if req.max_new == 1:
+            done.append(self._finish(slot))
+
+    def _decode_tick(self, done: List[Request]) -> None:
+        # one dispatch per live param version (≥ 2 only mid-hot-swap), all
+        # through the same compiled step; non-matching lanes are masked out
+        # of the cache commit and their host state is left untouched
+        for version in sorted(set(self._pinned[self._live].tolist())):
+            mask = self._live & (self._pinned == version)
+            nxt, self._caches = self._decode_commit(
+                self.slot.buffer(version), self._caches,
+                jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                jnp.asarray(mask))
+            nxt = np.asarray(nxt)                                 # [N, B]
+            for slot in np.flatnonzero(mask):
+                req = self._reqs[slot]
+                req.node_tokens.append(nxt[:, slot].copy())
+                self._tokens[:, slot] = nxt[:, slot]
+                self._pos[slot] += 1
+                if len(req.node_tokens) >= req.max_new:
+                    done.append(self._finish(int(slot)))
+
+    def _finish(self, slot: int) -> Request:
+        req = self._reqs[slot]
+        req.finish_t = self._now()
+        self._live[slot] = False
+        self._reqs[slot] = None
+        return req

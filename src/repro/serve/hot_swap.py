@@ -1,0 +1,77 @@
+"""Zero-downtime hot-swap: an atomic double-buffered ensemble param slot.
+
+Protocol (docs/serving.md#hot-swap-protocol):
+
+1. ``ingest(path)`` reads ONLY the stacked per-node params out of a full
+   ``SwarmSession.save`` checkpoint (``core.session.load_checkpoint_params``
+   skips opt state / merge stats / wire state by template) and validates the
+   tree structure, shapes and node count against the live ensemble.
+2. ``publish`` stages the new buffer under a fresh version number FIRST and
+   flips the live version pointer LAST — a single int store — so a reader
+   always sees one complete buffer, never a mix of old and new leaves.
+3. In-flight requests are pinned to the version they were admitted under
+   (``Request.param_version``); the engine dispatches one decode per live
+   version during the transition window, all through the same compiled step
+   (params are an argument, so a swap never retraces).
+4. Superseded buffers stay resident until ``retire`` observes that no live
+   slot pins them; the engine calls it every tick, so the old ensemble is
+   freed exactly when its last request drains.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import jax
+
+from repro.core.session import load_checkpoint_params
+
+
+def _spec(params) -> Tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return treedef, [(leaf.shape, leaf.dtype) for leaf in leaves]
+
+
+class HotSwapSlot:
+    """Double-buffered stacked-ensemble params with version pinning."""
+
+    def __init__(self, params: Any):
+        self._buffers: Dict[int, Any] = {0: params}
+        self._version = 0
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def versions(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._buffers))
+
+    @property
+    def live(self) -> Any:
+        return self._buffers[self._version]
+
+    def buffer(self, version: int) -> Any:
+        return self._buffers[version]
+
+    def publish(self, params: Any) -> int:
+        """Atomically make ``params`` the live ensemble; returns its version."""
+        if _spec(params) != _spec(self.live):
+            raise ValueError(
+                "published params do not match the live ensemble's "
+                "tree structure / leaf shapes / dtypes")
+        staged = self._version + 1
+        self._buffers[staged] = params   # stage the complete buffer first ...
+        self._version = staged           # ... flip the pointer last
+        return staged
+
+    def ingest(self, path: str, *, expect_nodes: Optional[int] = None) -> int:
+        """Load the stacked params from a ``SwarmSession.save`` checkpoint
+        and publish them as the new live version."""
+        return self.publish(load_checkpoint_params(
+            path, self.live, expect_nodes=expect_nodes))
+
+    def retire(self, pinned: Iterable[int]) -> None:
+        """Drop buffers no in-flight request pins (live always survives)."""
+        keep = {int(v) for v in pinned} | {self._version}
+        for version in [v for v in self._buffers if v not in keep]:
+            del self._buffers[version]

@@ -1,0 +1,76 @@
+"""Request queue for the serving plane.
+
+Single-threaded and tick-driven: :class:`~repro.serve.engine.ServeEngine`
+pumps the queue from its scheduler loop, so admission order, param-version
+pinning and completion are fully deterministic (and therefore testable —
+the hot-swap invariants in tests/test_serve.py rely on this).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request and its full lifecycle record.
+
+    ``node_tokens`` accumulates the per-node token vector emitted at each
+    step (a list of ``[N]`` int32 arrays); ``tokens`` is the aggregated
+    stream — identical across nodes for consensus/average/topk modes, node
+    0's stream under ``per_node``. ``param_version`` is pinned at admission:
+    every token of this request comes from exactly that version of the
+    hot-swap slot, even if a newer checkpoint is published mid-request.
+    """
+
+    rid: int
+    prompt: np.ndarray              # [prompt_len] int32
+    max_new: int
+    submit_t: float = 0.0
+    admit_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    param_version: Optional[int] = None
+    node_tokens: List[np.ndarray] = field(default_factory=list)
+
+    @property
+    def tokens(self) -> List[int]:
+        return [int(v[0]) for v in self.node_tokens]
+
+    @property
+    def done(self) -> bool:
+        return self.finish_t is not None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.finish_t is None else self.finish_t - self.submit_t
+
+
+class RequestQueue:
+    """FIFO admission queue with monotonically increasing request ids."""
+
+    def __init__(self, now=time.perf_counter):
+        self._pending: Deque[Request] = deque()
+        self._ids = itertools.count()
+        self._now = now
+
+    def submit(self, prompt, max_new: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        req = Request(rid=next(self._ids), prompt=prompt, max_new=int(max_new),
+                      submit_t=self._now())
+        self._pending.append(req)
+        return req
+
+    def pop(self) -> Request:
+        return self._pending.popleft()
+
+    def __len__(self) -> int:
+        return len(self._pending)

@@ -1,0 +1,52 @@
+# swarmlint: treat-as=src/repro/serve/engine.py
+"""SWL003 fixture (serve scope): decode/prefill/commit/swap-class jit entry
+points in ``src/repro/serve/`` must donate their buffers.
+
+Masquerades as serve/engine.py. An undonated decode/commit entry copies the
+whole ensemble slot-cache table on every tick; marked lines are the expected
+findings, the ``_ok`` / non-hot forms prove the negatives.
+"""
+import functools
+
+import jax
+
+
+class FixtureServe:
+    def _decode_commit_impl(self, params, caches, tokens):
+        return tokens, caches
+
+    def _prefill_commit_impl(self, params, caches, prompt):
+        return prompt, caches
+
+    def _score(self, x):
+        return x
+
+    def __init__(self):
+        self.decode = jax.jit(self._decode_commit_impl)  # LINT-EXPECT: SWL003
+        self.decode_ok = jax.jit(self._decode_commit_impl,
+                                 donate_argnums=(1,))
+        self.prefill_ok = jax.jit(self._prefill_commit_impl,
+                                  donate_argnames=("caches",))
+        self.score = jax.jit(self._score)  # not decode/commit-class: allowed
+
+
+@jax.jit
+def swap_params(old, new):  # LINT-EXPECT: SWL003
+    return new
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def decode_tick(params, caches, mode):  # LINT-EXPECT: SWL003
+    return caches
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def commit_caches(params, caches):
+    return caches
+
+
+# round-class names are NOT hot in the serve scope (the serve regex replaces
+# the engine/session one rather than extending it)
+@jax.jit
+def run_rounds(params):
+    return params

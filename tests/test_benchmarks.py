@@ -159,6 +159,43 @@ def test_smoke_sections_go_to_scratch_not_the_committed_json(smoke_out):
     assert "mesh_wire_smoke" in doc
 
 
+def test_smoke_covers_serve(smoke_out):
+    """The serving plane (PR 8): every batching-config × consensus-mode combo
+    reports requests/sec + p99 latency with a retrace-free timed region, and
+    the rows land in the .bench/ scratch copy of BENCH_serve.json."""
+    path = _row(smoke_out, "serve_json")[2].strip()
+    assert os.path.basename(os.path.dirname(path)) == ".bench"
+    with open(path) as f:
+        doc = json.load(f)
+    sect = doc["serve_smoke"]
+    rows = sect["rows"]
+    assert {(r["config"], r["mode"]) for r in rows} == {
+        ("naive_b1", "consensus"), ("naive_b1", "average"),
+        ("continuous_b8", "consensus"), ("continuous_b8", "average")}
+    for r in rows:
+        assert r["requests_per_s"] > 0 and r["p99_ms"] > 0
+        assert r["retraces_timed"] == 0     # bucket grid fully warmed
+    # the continuous-beats-naive ordering is pinned on the committed
+    # full-run numbers below; smoke machines only have to report the ratio
+    assert set(sect["continuous_over_naive_throughput"]) == {"consensus",
+                                                             "average"}
+
+
+def test_committed_serve_bench_reports_continuous_win():
+    """ISSUE 8 acceptance: in the committed full-run BENCH_serve.json,
+    continuous batching beats naive one-request-at-a-time dispatch on
+    throughput for every consensus mode (deterministic artifact read — no
+    machine timing involved)."""
+    with open(os.path.join(ROOT, "BENCH_serve.json")) as f:
+        doc = json.load(f)
+    sect = doc["serve"]
+    assert len(sect["rows"]) >= 4
+    assert all(r["retraces_timed"] == 0 for r in sect["rows"])
+    ratios = sect["continuous_over_naive_throughput"]
+    assert set(ratios) == {"consensus", "average"}
+    assert all(v > 1.0 for v in ratios.values())
+
+
 def test_smoke_covers_dynamic_membership(smoke_out):
     """The join/leave/rejoin schedule runs and never retraces the compiled
     round: membership is runtime state, not a compile-time constant."""

@@ -1,0 +1,331 @@
+"""Serving plane (PR 8): continuous-batching consensus engine + hot-swap.
+
+Pins the tentpole's acceptance criteria:
+  * the vmapped ensemble engine reproduces the host-loop ``generate``
+    reference token for token (single request, identical-replica consensus),
+  * continuous batching is isolation-preserving: a request's tokens are
+    identical whether it runs alone or co-batched with strangers at other
+    depths (per-lane cache_pos + masked commits),
+  * compiles are bounded by the bucket grid: steady-state serving adds ZERO
+    traces (trace-counter idiom),
+  * hot-swap under load: decode ticks interleaved with a checkpoint ingest
+    (a) never retrace, (b) feed every request exactly one param version,
+    (c) leave the live ensemble bit-identical to the ``session.save``
+    checkpoint, and (d) drop no in-flight request,
+  * ``load_checkpoint_params`` restores only the params subtree and rejects
+    node-count mismatches.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import SwarmConfig
+from repro.core.session import SwarmSession, load_checkpoint_params
+from repro.launch.serve import generate
+from repro.models import Model, build_model
+from repro.serve import (AGG_MODES, BucketPolicy, HotSwapSlot, RequestQueue,
+                         ServeEngine, aggregate_logits)
+
+N = 3
+V = 16
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _smoke_model():
+    cfg = smoke_variant(get_config("minicpm-2b")).replace(vocab_size=64)
+    return build_model(cfg)
+
+
+def _stacked_params(model, n=N, seed=0):
+    return jax.vmap(model.init)(jax.random.split(jax.random.key(seed), n))
+
+
+def _toy_model():
+    """Constant-logits model: argmax(params['x']) regardless of input — the
+    emitted token IS the param version, which makes hot-swap pinning
+    directly observable. The cache records every written token so the
+    masked-commit path is exercised too."""
+
+    def decode(params, tokens, caches, cache_pos):
+        b, s = tokens.shape
+        written = jax.lax.dynamic_update_slice_in_dim(
+            caches["written"], tokens, cache_pos, axis=1)
+        logits = jnp.broadcast_to(params["x"][None, None, :], (b, s, V))
+        return logits, {"written": written}
+
+    return Model(
+        cfg=None,
+        init=lambda key: {"x": jax.random.normal(key, (V,))},
+        loss_fn=None,
+        decode=decode,
+        init_cache=lambda b, max_len: {"written": jnp.zeros((b, max_len),
+                                                            jnp.int32)})
+
+
+def _peaked(token: int, n=N):
+    """Stacked toy params whose every node argmaxes to ``token``."""
+    x = np.zeros((n, V), np.float32)
+    x[:, token] = 5.0
+    return {"x": jnp.asarray(x)}
+
+
+def _toy_session_fns():
+    def train_step(params, opt_state, batch, step):
+        return {"x": params["x"] + batch}, opt_state, {"loss": jnp.sum(batch)}
+
+    def eval_fn(params, val):
+        return 1.0 - 0.0 * jnp.sum(params["x"])
+
+    return train_step, eval_fn
+
+
+def _cfg(**kw):
+    kw.setdefault("n_nodes", N)
+    kw.setdefault("sync_every", 1)
+    kw.setdefault("merge", "mean")
+    kw.setdefault("topology", "full")
+    return SwarmConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# bucket policy + queue
+# ---------------------------------------------------------------------------
+
+def test_bucket_policy():
+    p = BucketPolicy(batch_buckets=(1, 2, 4), seq_buckets=(8, 16))
+    assert p.batch_bucket(1) == 1 and p.batch_bucket(3) == 4
+    assert p.seq_bucket(8) == 8 and p.seq_bucket(9) == 16
+    with pytest.raises(ValueError):
+        p.batch_bucket(5)
+    with pytest.raises(ValueError):
+        p.seq_bucket(17)
+    padded, length = p.pad_prompt(np.arange(1, 6))
+    assert padded.shape == (8,) and length == 5
+    assert padded[:5].tolist() == [1, 2, 3, 4, 5] and not padded[5:].any()
+    with pytest.raises(ValueError):
+        BucketPolicy(batch_buckets=(4, 2))       # must be sorted
+
+
+def test_queue_fifo_and_validation():
+    q = RequestQueue()
+    a = q.submit([1, 2], 4)
+    b = q.submit([3], 4)
+    assert len(q) == 2 and q.pop() is a and q.pop() is b
+    with pytest.raises(ValueError):
+        q.submit([], 4)
+    with pytest.raises(ValueError):
+        q.submit([1], 0)
+
+
+# ---------------------------------------------------------------------------
+# aggregation modes vs a numpy oracle
+# ---------------------------------------------------------------------------
+
+def test_aggregate_modes_match_numpy_oracle():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(5, 3, 11)).astype(np.float32)
+    out = {m: np.asarray(aggregate_logits(jnp.asarray(logits), m, top_k=2))
+           for m in AGG_MODES}
+    votes = logits.argmax(-1)                                   # [N, B]
+    assert (out["per_node"] == votes).all()
+    # consensus: strict majority wins; with all-distinct votes the highest
+    # mean-probability candidate does
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    for b in range(3):
+        counts = np.bincount(votes[:, b], minlength=11).astype(np.float64)
+        counts += probs.mean(0)[b] / 6.0
+        assert (out["consensus"][:, b] == counts.argmax()).all()
+        assert (out["average"][:, b] == probs.mean(0)[b].argmax()).all()
+        top2 = np.argsort(-probs.max(-1)[:, b])[:2]
+        assert (out["topk"][:, b] == probs[top2, b].mean(0).argmax()).all()
+
+
+def test_consensus_majority_beats_confidence():
+    """Two peaked nodes out-vote one extremely confident dissenter."""
+    logits = np.zeros((3, 1, V), np.float32)
+    logits[0, 0, 3] = 2.0
+    logits[1, 0, 3] = 2.0
+    logits[2, 0, 9] = 50.0
+    out = np.asarray(aggregate_logits(jnp.asarray(logits), "consensus"))
+    assert (out == 3).all()
+
+
+# ---------------------------------------------------------------------------
+# engine vs the host-loop generate reference
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_host_generate():
+    """Identical-replica consensus through the continuous engine == the
+    seed's host-loop greedy decode, token for token (padded-bucket prefill
+    is exact for position-indexed caches)."""
+    model = _smoke_model()
+    params1 = _stacked_params(model, n=1)
+    eng = ServeEngine(
+        model, jax.tree.map(lambda x: jnp.concatenate([x] * N), params1),
+        mode="consensus", max_len=32, max_slots=2,
+        policy=BucketPolicy(batch_buckets=(1, 2), seq_buckets=(8, 16)))
+    prompt = np.arange(1, 8) % 64
+    req = eng.submit(prompt, max_new=6)
+    eng.drain()
+    ref = np.asarray(generate(model, jax.tree.map(lambda x: x[0], params1),
+                              jnp.asarray(prompt)[None], 6, 32))[0]
+    assert req.tokens == ref.tolist()
+    # consensus of identical replicas: every node carries the same stream
+    assert all((v == v[0]).all() for v in req.node_tokens)
+
+
+def test_continuous_batching_is_isolation_preserving():
+    """Requests co-batched at different depths (staggered admission, mixed
+    prompt lengths) produce exactly the tokens they produce alone."""
+    model = _smoke_model()
+    params = _stacked_params(model)
+    policy = BucketPolicy(batch_buckets=(1, 2, 4), seq_buckets=(8, 16))
+    prompts = [np.arange(1, 1 + n) % 64 for n in (5, 9, 3, 7)]
+
+    solo = []
+    for p in prompts:
+        eng = ServeEngine(model, params, mode="average", max_len=32,
+                          max_slots=1,
+                          policy=BucketPolicy(batch_buckets=(1,),
+                                              seq_buckets=(8, 16)))
+        req = eng.submit(p, max_new=5)
+        eng.drain()
+        solo.append(req.tokens)
+
+    eng = ServeEngine(model, params, mode="average", max_len=32, max_slots=4,
+                      policy=policy)
+    first = [eng.submit(p, max_new=5) for p in prompts[:2]]
+    eng.step()                       # stagger: two requests mid-flight ...
+    later = [eng.submit(p, max_new=5) for p in prompts[2:]]
+    eng.drain()                      # ... before the other two are admitted
+    got = [r.tokens for r in first + later]
+    assert got == solo
+
+
+def test_steady_state_serving_never_retraces():
+    """Compiles are bounded by the bucket grid: a second wave of requests
+    through already-warm shapes adds zero traces."""
+    model = _smoke_model()
+    eng = ServeEngine(model, _stacked_params(model), max_len=32, max_slots=2,
+                      policy=BucketPolicy(batch_buckets=(1, 2),
+                                          seq_buckets=(8,)))
+    for _ in range(2):
+        for n in (4, 6, 5):
+            eng.submit(np.arange(1, 1 + n), max_new=4)
+        eng.drain()
+        warm = dict(eng.trace_counts)
+    assert dict(eng.trace_counts) == warm
+    assert all(v == 1 for v in eng.trace_counts.values())
+
+
+# ---------------------------------------------------------------------------
+# hot-swap
+# ---------------------------------------------------------------------------
+
+def test_hot_swap_slot_is_double_buffered():
+    slot = HotSwapSlot(_peaked(3))
+    assert slot.version == 0 and slot.versions == (0,)
+    v1 = slot.publish(_peaked(9))
+    assert (slot.version, slot.versions) == (1, (0, 1))
+    assert np.asarray(slot.live["x"]).argmax(-1).tolist() == [9] * N
+    slot.retire(pinned=[0])          # old version still pinned -> kept
+    assert slot.versions == (0, 1)
+    slot.retire(pinned=[])           # drained -> dropped; live survives
+    assert slot.versions == (v1,)
+    with pytest.raises(ValueError):
+        slot.publish({"x": jnp.zeros((N, V + 1))})
+    with pytest.raises(ValueError):
+        slot.publish({"y": slot.live["x"]})
+
+
+def test_hot_swap_under_load(tmp_path):
+    """The PR 8 invariant triple, under a real mid-flight swap from a real
+    ``session.save`` checkpoint of a still-usable training session."""
+    model = _toy_model()
+    eng = ServeEngine(model, _peaked(3), mode="consensus", max_len=32,
+                      max_slots=2,
+                      policy=BucketPolicy(batch_buckets=(1, 2),
+                                          seq_buckets=(8,)))
+    # warm every (kind, shape) this test will touch — decode at both batch
+    # buckets, prefill at both table widths — then snapshot traces
+    eng.submit([1, 2, 3], max_new=3)
+    eng.drain()
+    eng.submit([1, 2, 3], max_new=3)
+    eng.submit([1, 2], max_new=3)
+    eng.drain()
+    warm = dict(eng.trace_counts)
+
+    old = eng.submit([1, 2, 3, 4], max_new=6)
+    eng.step()                                   # old request mid-flight
+    assert eng.live_count == 1
+
+    # a training swarm whose params now peak at token 9, checkpointed
+    train_step, eval_fn = _toy_session_fns()
+    sess = SwarmSession(_cfg(), train_step, eval_fn, params=_peaked(9),
+                        stacked=True)
+    ckpt = str(tmp_path / "swarm.msgpack")
+    sess.save(ckpt)
+    v1 = eng.ingest_checkpoint(ckpt)
+    assert v1 == 1 and eng.slot.versions == (0, 1)
+
+    new = eng.submit([5, 6], max_new=4)
+    eng.step()                                   # two versions in flight
+    assert eng.live_count == 2
+    done = eng.drain()
+
+    # (d) no dropped in-flight requests
+    assert {r.rid for r in done} == {old.rid, new.rid}
+    assert len(old.tokens) == 6 and len(new.tokens) == 4
+    # (b) exactly one param version per request: the toy model emits its
+    # params' argmax, so every token names the version that produced it
+    assert old.param_version == 0 and old.tokens == [3] * 6
+    assert new.param_version == 1 and new.tokens == [9] * 4
+    # (a) the swap and the two-version transition window never retraced
+    assert dict(eng.trace_counts) == warm
+    # (c) live ensemble bit-identical to the ingested checkpoint
+    want = load_checkpoint_params(ckpt, _peaked(0), expect_nodes=N)
+    assert jax.tree.map(lambda a, b: bool((np.asarray(a) == np.asarray(b))
+                                          .all()), eng.slot.live, want) \
+        == jax.tree.map(lambda a: True, want)
+    # old buffer retired once its last request drained
+    assert eng.slot.versions == (1,)
+
+
+def test_load_checkpoint_params(tmp_path):
+    train_step, eval_fn = _toy_session_fns()
+    sess = SwarmSession(_cfg(), train_step, eval_fn, params=_peaked(7),
+                        stacked=True)
+    path = str(tmp_path / "ck.msgpack")
+    sess.save(path)
+    got = load_checkpoint_params(path, _peaked(0), expect_nodes=N)
+    assert (np.asarray(got["x"]) == np.asarray(sess.state.params["x"])).all()
+    with pytest.raises(ValueError, match="n_nodes"):
+        load_checkpoint_params(path, _peaked(0), expect_nodes=N + 1)
+
+
+# ---------------------------------------------------------------------------
+# engine guard rails
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_oversized_work():
+    model = _toy_model()
+    eng = ServeEngine(model, _peaked(1), max_len=10,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)), max_slots=1)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(9), max_new=1)      # no seq bucket fits
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(8), max_new=3)      # cache overflow
+    with pytest.raises(ValueError):
+        ServeEngine(model, _peaked(1), max_slots=4,
+                    policy=BucketPolicy(batch_buckets=(1, 2)))
+    with pytest.raises(ValueError):
+        ServeEngine(model, _peaked(1), mode="vote")
