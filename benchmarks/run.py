@@ -42,6 +42,12 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
                     one-request-at-a-time dispatch × consensus/average
                     ensemble modes — requests/sec, p99 latency and timed-
                     region retrace counts, written to BENCH_serve.json
+  fault_matrix      chaos plane (ISSUE 9): every FaultPlan kind (crash,
+                    straggle, drop, corrupt, preempt) × backend × merge,
+                    replayed against a fault-free twin — rounds-to-recover,
+                    final loss delta and retrace counts per cell, written
+                    to BENCH_faults.json (gossip q8 cells run in a
+                    forced-CPU-mesh subprocess on full runs)
 
 ``--smoke`` runs a seconds-scale subset (tiny shapes, no cached experiment
 protocol) so CI can exercise every benchmark entry point; a tier-1 test
@@ -902,6 +908,177 @@ def serve_smoke():
     serve(smoke=True)
 
 
+# ---------------------------------------------------------------------------
+# fault matrix — chaos plane (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _fault_matrix_plans(n: int, rounds: int):
+    from repro.faults import FaultPlan
+    base = lambda: FaultPlan(n_nodes=n, n_rounds=rounds, seed=0)
+    return {
+        "crash": base().crash(1, at=2, rejoin=4),
+        "straggle": base().straggle(2, at=2, rounds=2),
+        "drop": base().drop(3, at=2),
+        "corrupt": base().corrupt(1, at=2),
+        "preempt": base().preempt(at=4),
+    }
+
+
+def _fault_matrix_cells(merges, fault_kinds, rounds: int, d: int, *,
+                        backend: str = "engine", session_kw=None,
+                        tol: float = 1e-3):
+    """One (fault × merge) grid on one backend: each cell replays a fault
+    plan against a fresh int8-wire session under contractive pull-to-target
+    dynamics and reports rounds-to-recover (first round, counted from the
+    fault's last affected round, within ``tol`` of the fault-free twin's
+    trajectory), the final loss delta, and excess retraces (compiles beyond
+    the one-per-session warmup — must be 0: faults are runtime data)."""
+    import tempfile
+    from repro.configs.base import SwarmConfig
+    from repro.core.session import SwarmSession
+    from repro.faults import FaultPlan, run_plan
+
+    n, steps, lr = 4, 3, 0.5
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    # the per-node pull target rides in as the batch (train_step is vmapped
+    # over nodes, so it can't index the stacked target itself)
+    batches = jnp.tile(targets[None], (steps, 1, 1))
+    val = jnp.zeros((n, 1))
+    session_kw = dict(session_kw or {})
+    tmp = tempfile.mkdtemp()
+    plans = _fault_matrix_plans(n, rounds)
+
+    def make(merge, traces):
+        topo = "ring" if merge == "fisher" else "full"
+        cfg = SwarmConfig(n_nodes=n, sync_every=steps, topology=topo,
+                          merge=merge, lora_only=False, val_threshold=0.0,
+                          wire_dtype="int8", wire_block=128)
+
+        def pull_step(p, o, b, s):
+            traces.append(1)      # python body runs only at (re)trace
+            g = p["x"] - b
+            return {"x": p["x"] - lr * g}, o, {"loss": jnp.sum(g * g)}
+
+        def eval_fn(p, v):
+            return 1.0 - 0.0 * jnp.sum(p["x"])
+
+        return SwarmSession(cfg, pull_step, eval_fn,
+                            params={"x": jnp.zeros((n, d), jnp.float32)},
+                            stacked=True, data_sizes=[1.0] * n, **session_kw)
+
+    def run(merge, plan):
+        traces, traj = [], []
+        box = {"sess": make(merge, traces)}
+
+        def mk():                 # preempt rebuild: track the live session
+            box["sess"] = make(merge, traces)
+            return box["sess"]
+
+        def obs(r, log):
+            traj.append(np.asarray(box["sess"].state.params["x"],
+                                   np.float64).copy())
+
+        run_plan(box["sess"], plan, batches, val, make_session=mk,
+                 checkpoint_path=os.path.join(tmp, "fault_preempt.msgpack"),
+                 on_round=obs)
+        n_sessions = 1 + sum(e.kind == "preempt" for e in plan.events)
+        return np.stack(traj), len(traces) - n_sessions
+
+    t64 = np.asarray(targets, np.float64)
+    loss = lambda x: float(np.mean((x - t64) ** 2))
+    rows = []
+    for merge in merges:
+        ref, _ = run(merge, FaultPlan(n_nodes=n, n_rounds=rounds, seed=0))
+        for kind in fault_kinds:
+            plan = plans[kind]
+            traj, excess = run(merge, plan)
+            low = plan.lower()
+            faulty = (~low.active.all(axis=1)) | low.corrupt.any(axis=1) \
+                | low.preempt
+            fault_end = int(np.flatnonzero(faulty).max())
+            delta = np.abs(traj - ref).max(axis=(1, 2))
+            rec = next((r - fault_end for r in range(fault_end, rounds)
+                        if delta[r] <= tol), -1)
+            # diagnostic-quality recovery: fisher's mean-normalized Δθ²
+            # importance remembers the fault window ~forever, so the exact
+            # parameter trajectory may never rejoin the twin's — while the
+            # quality metric (mean squared distance to the per-node optima)
+            # still re-converges; report both
+            ldelta = np.array([abs(loss(traj[r]) - loss(ref[r]))
+                               / max(loss(ref[r]), 1e-9)
+                               for r in range(rounds)])
+            rec_loss = next((r - fault_end for r in range(fault_end, rounds)
+                             if ldelta[r] <= tol), -1)
+            rows.append(dict(
+                backend=backend, merge=merge, fault=kind, rounds=rounds,
+                fault_end_round=fault_end, rounds_to_recover=rec,
+                rounds_to_recover_loss=rec_loss,
+                final_max_delta=float(delta[-1]),
+                final_rel_loss_delta=float(ldelta[-1]),
+                excess_retraces=excess))
+            print(f"fault_{backend}_{merge}_{kind},0,"
+                  f"recover={rec};recover_loss={rec_loss};"
+                  f"delta={delta[-1]:.2e};retraces={excess}")
+    return rows
+
+
+def _fault_matrix_gossip_inner(n: int, d: int, rounds: int):
+    """Runs inside the forced-device-count subprocess: the gossip-backend
+    q8 cells (corrupt degrades to a one-round drop — no in-graph wire
+    injection on the mesh schedules, by design)."""
+    import json as json_mod
+    assert jax.device_count() >= n, "inner bench needs the forced device count"
+    mesh = jax.make_mesh((n,), ("node",), devices=jax.devices()[:n])
+    rows = _fault_matrix_cells(
+        ("fedavg", "fisher"), ("crash", "drop", "corrupt"), rounds, d,
+        backend="gossip",
+        session_kw=dict(backend="gossip", mesh=mesh, axis="node"))
+    print("fault_rows_json,0," + json_mod.dumps(rows))
+
+
+def fault_matrix(smoke: bool = False):
+    """Chaos-plane recovery matrix (ISSUE 9): every FaultPlan kind replayed
+    against engine-backend int8 sessions (plus gossip q8 cells in full runs,
+    forced-CPU-mesh subprocess), each versus its fault-free twin; rows land
+    in BENCH_faults.json (committed on full runs, scratch on --smoke)."""
+    kinds = ("crash", "straggle", "drop", "corrupt", "preempt")
+    rounds, d = (8, 256) if smoke else (12, 1024)
+    merges = ("fedavg",) if smoke else ("fedavg", "fisher")
+    rows = _fault_matrix_cells(merges, kinds, rounds, d)
+    if not smoke:
+        import subprocess
+        import sys
+        n = 4
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+        src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                           "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--inner-fault-gossip", f"{n},{d},{rounds}"],
+            capture_output=True, text=True, env=env, timeout=600)
+        if out.returncode != 0:
+            raise RuntimeError(f"fault matrix gossip subprocess failed: "
+                               f"{out.stderr[-800:]}")
+        for line in out.stdout.splitlines():
+            if line.startswith("fault_rows_json,"):
+                rows += json.loads(line.split(",", 2)[2])
+            elif line:
+                print(line)
+    data = dict(n_nodes=4, rounds=rounds, tol=1e-3, rows=rows)
+    path = _bench_json_update("fault_smoke" if smoke else "fault_matrix",
+                              data, smoke=smoke, filename="BENCH_faults.json")
+    print(f"fault_matrix_json,0,{path}")
+
+
+def fault_matrix_smoke():
+    fault_matrix(smoke=True)
+
+
 def merge_kernel_smoke():
     merge_kernel(1 << 14)
 
@@ -914,13 +1091,13 @@ ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
        sync_roundtrip, engine_roundtrip, overlap_roundtrip,
        dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity,
-       mesh_wire, hier_sync, serve]
+       mesh_wire, hier_sync, serve, fault_matrix]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
          engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
          spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke,
-         mesh_wire_smoke, hier_sync_smoke, serve_smoke]
+         mesh_wire_smoke, hier_sync_smoke, serve_smoke, fault_matrix_smoke]
 
 
 def roofline_table():
@@ -952,6 +1129,9 @@ def main(argv=None) -> None:
     ap.add_argument("--inner-hier-sync", default="",
                     help="internal: k,m,d,reps (run inside the forced-device"
                          " subprocess)")
+    ap.add_argument("--inner-fault-gossip", default="",
+                    help="internal: n,d,rounds (run inside the forced-device"
+                         " subprocess)")
     args = ap.parse_args(argv)
 
     if args.inner_spmd_parity:
@@ -972,6 +1152,11 @@ def main(argv=None) -> None:
     if args.inner_hier_sync:
         k, m, d, reps = map(int, args.inner_hier_sync.split(","))
         _hier_sync_inner(k, m, d, reps)
+        return
+
+    if args.inner_fault_gossip:
+        n, d, rounds = map(int, args.inner_fault_gossip.split(","))
+        _fault_matrix_gossip_inner(n, d, rounds)
         return
 
     print("name,us_per_call,derived")

@@ -874,3 +874,48 @@ class PallasBlockRule(Rule):
                             "auto_block/min or validate divisibility before "
                             "the pallas_call"))
         return out
+
+
+# ---------------------------------------------------------------------------
+# SWL007 — host-side retry loops must go through faults/retry.with_retry
+# ---------------------------------------------------------------------------
+
+@rule
+class RetryLoopRule(Rule):
+    id = "SWL007"
+    severity = "error"
+    summary = ("src/: hand-rolled retry loops (loop + exception handler + "
+               "sleep) must delegate to repro.faults.retry.with_retry — the "
+               "single home for attempt bounds, backoff, and timeout budgets")
+
+    def applies(self, module: Module) -> bool:
+        # retry.py IS the sanctioned implementation
+        return (module.rel.startswith("src/repro/")
+                and module.rel != "src/repro/faults/retry.py")
+
+    def check(self, module: Module, ctx: LintContext) -> List[Finding]:
+        out: List[Finding] = []
+        flagged: Set[int] = set()
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.While, ast.For)):
+                continue
+            if node.lineno in flagged:  # nested loop already reported
+                continue
+            has_handler = False
+            has_sleep = False
+            for n in ast.walk(node):
+                if isinstance(n, ast.Try) and n.handlers:
+                    has_handler = True
+                elif (isinstance(n, ast.Call)
+                      and _attr_name(n.func) == "sleep"):
+                    has_sleep = True
+            if has_handler and has_sleep:
+                flagged.update(x.lineno for x in ast.walk(node)
+                               if isinstance(x, (ast.While, ast.For)))
+                out.append(Finding(
+                    module.path, node.lineno, self.id, self.severity,
+                    "hand-rolled retry loop (loop + exception handler + "
+                    "sleep) — use repro.faults.retry.with_retry, which owns "
+                    "attempt bounds, exponential backoff, and the timeout "
+                    "budget (and is what SWL007 exempts)"))
+        return out

@@ -12,17 +12,28 @@ index 0 (``[0]``) — or a dict key ``"a/b"`` vs nested ``a → b`` — used to
 serialize to the same string under the old ``"/"``-joined scheme and silently
 collide. Legacy checkpoints are still readable: the loader falls back to the
 old key format per leaf.
+
+Durability (docs/faults.md): writes are ATOMIC — the payload lands in a
+temp file in the destination directory, is fsynced, and is `os.replace`d
+over the target, so a crash/preempt mid-save leaves either the previous
+checkpoint or the new one, never a torn file. Reads and writes retry
+transient ``OSError`` s with bounded backoff (`repro.faults.retry`); a
+file that is truncated or not a checkpoint raises a clear ``ValueError``
+instead of a msgpack stack trace.
 """
 from __future__ import annotations
 
 import json
 import os
+import tempfile
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from repro.faults.retry import with_retry
 
 
 def _key(path) -> str:
@@ -50,18 +61,67 @@ def _flatten(tree) -> dict:
     return flat
 
 
+def _atomic_write_bytes(path: str, blob: bytes) -> None:
+    """Write-all-or-nothing: temp file in the SAME directory (so the final
+    rename never crosses a filesystem), flush + fsync, then `os.replace`
+    over the destination. Readers only ever observe a complete file."""
+    directory = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=directory,
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     payload = {"leaves": _flatten(tree), "metadata": metadata or {}}
-    with open(path, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+    blob = msgpack.packb(payload, use_bin_type=True)
+    with_retry(lambda: _atomic_write_bytes(path, blob), retry_on=(OSError,),
+               describe=f"checkpoint write {path!r}")
+
+
+def _read_payload(path: str) -> dict:
+    """Read + decode a checkpoint file with transient-IO retry and a clear
+    error for truncated/corrupt/non-checkpoint content."""
+    def read() -> bytes:
+        with open(path, "rb") as f:
+            return f.read()
+
+    # raise_last so a genuine FileNotFoundError surfaces as itself (not
+    # wrapped in RetryError) after the bounded attempts
+    blob = with_retry(read, retry_on=(OSError,), raise_last=True,
+                      describe=f"checkpoint read {path!r}")
+    try:
+        payload = msgpack.unpackb(blob, raw=False)
+    except (msgpack.exceptions.UnpackException, ValueError, KeyError,
+            TypeError) as exc:
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: not a complete "
+            f"msgpack payload ({type(exc).__name__}: {exc}). Writes are "
+            "atomic (temp-file + os.replace), so a torn file usually means "
+            "a partial copy or an interrupted legacy writer") from exc
+    if not isinstance(payload, dict) or "leaves" not in payload \
+            or "metadata" not in payload:
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: decoded payload is "
+            "missing the leaves/metadata envelope")
+    return payload
 
 
 def load_pytree(path: str, like: Any) -> Any:
     """Restore into the structure of `like` (shape/dtype checked)."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    leaves = payload["leaves"]
+    leaves = _read_payload(path)["leaves"]
 
     def restore(p, leaf):
         key = _key(p)
@@ -90,8 +150,7 @@ def load_pytree(path: str, like: Any) -> Any:
 
 
 def load_metadata(path: str) -> dict:
-    with open(path, "rb") as f:
-        return msgpack.unpackb(f.read(), raw=False)["metadata"]
+    return _read_payload(path)["metadata"]
 
 
 def save_json(path: str, obj: Any) -> None:

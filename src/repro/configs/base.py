@@ -175,6 +175,13 @@ class SwarmConfig:
     # matters (all candidates ride one class) and defaults are neutral.
     intra_pod_cost: float = 1.0
     cross_pod_cost: float = 1.0
+    # graceful degradation (repro.faults, docs/faults.md): minimum number
+    # of active nodes for a sync to commit. Below quorum the round still
+    # trains locally but every gate is held closed — nodes keep their
+    # locals and the merge is skipped (0 disables the policy). Evaluated
+    # in-graph on the post-quarantine membership mask, so membership
+    # changes never retrace.
+    quorum: int = 0
     seed: int = 0
 
 

@@ -426,3 +426,47 @@ def wire_residual(payload, wire):
     return jax.tree.map(
         lambda p, w: None if p is None else jnp.asarray(p, jnp.float32) - w,
         payload, wire, is_leaf=lambda v: v is None)
+
+
+def _mix32(v):
+    """murmur3 fmix32: bijective avalanche on uint32 (each input bit flips
+    ~half the output bits)."""
+    v = v ^ (v >> jnp.uint32(16))
+    v = v * jnp.uint32(0x85EBCA6B)
+    v = v ^ (v >> jnp.uint32(13))
+    v = v * jnp.uint32(0xC2B2AE35)
+    v = v ^ (v >> jnp.uint32(16))
+    return v
+
+
+def payload_checksum(payload):
+    """Per-node uint32 checksum of a stacked payload pytree ([N] uint32).
+
+    Bit-level: every leaf row is bitcast to uint32, each element is
+    position-salted (a Weyl sequence keyed on the flattened index and the
+    leaf's position in the pytree) and avalanche-mixed before the mod-2³²
+    per-node sum. The mixing matters: a plain sum lets symmetric multi-bit
+    corruption cancel — k elements with the SAME bit toggled shift the sum
+    by (#zeros−#ones)·2^bit, which is zero whenever the toggles balance
+    (≈1/√k odds for random data). After mixing, every single-bit flip
+    perturbs its element's contribution pseudorandomly, so collisions need
+    a ~2⁻³² coincidence. Computed by sender and receiver of the quantized
+    wire; a mismatch quarantines the sender for the round
+    (reject-and-keep-local — see `SwarmEngine.sync` and docs/faults.md).
+    Traceable and cheap: elementwise bitcast + mix + a per-node reduction.
+    """
+    leaves = [x for x in jax.tree.leaves(payload,
+                                         is_leaf=lambda v: v is None)
+              if x is not None]
+    if not leaves:
+        raise ValueError("payload_checksum: empty payload pytree")
+    n = leaves[0].shape[0]
+    total = jnp.zeros((n,), jnp.uint32)
+    for i, x in enumerate(leaves):
+        u = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32),
+                                         jnp.uint32).reshape(n, -1)
+        salt = (jnp.arange(u.shape[1], dtype=jnp.uint32)
+                + jnp.uint32(i)) * jnp.uint32(0x9E3779B9)
+        total = total + jnp.sum(_mix32(u ^ salt[None, :]), axis=1,
+                                dtype=jnp.uint32)
+    return total

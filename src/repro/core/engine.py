@@ -101,6 +101,7 @@ import repro.core.topology as topo
 from repro.core import comms
 from repro.core import merge_impl as merge_lib
 from repro.core.lora import combine, split_adapters
+from repro.faults.signals import flip_payload_bits
 from repro.kernels.fused_merge import (DEFAULT_BLOCK, fused_merge_tree,
                                        fused_quant_merge_tree)
 
@@ -303,6 +304,12 @@ class SwarmEngine:
             getattr(cfg, "wire_dtype", "f32"))
         self.wire_block = comms.validate_wire_block(
             getattr(cfg, "wire_block", 512))
+        # static degradation policy (resolved here, not inside the traced
+        # sync): minimum active membership for any commit — docs/faults.md
+        self.quorum = int(getattr(cfg, "quorum", 0) or 0)
+        if self.quorum > cfg.n_nodes:
+            raise ValueError(f"quorum={self.quorum} can never be met with "
+                             f"n_nodes={cfg.n_nodes}")
         # the comms cost model picks the sync schedule at trace time: for
         # the gossip backend this decides which collectives propose lowers
         # to; for host it reports the SPMD-equivalent wire cost (simulated).
@@ -609,7 +616,8 @@ class SwarmEngine:
                                      wire_block=self.wire_block,
                                      mesh_shape=self.mesh_shape)
 
-    def sync(self, params, val, active=None, stats=None, wire=None):
+    def sync(self, params, val, active=None, stats=None, wire=None,
+             faults=None):
         """propose → in-graph validate → gate → fused commit. Pure/traceable.
 
         ``wire``: the error-feedback wire state from `core.comms` /
@@ -619,6 +627,16 @@ class SwarmEngine:
         quantize→merge→dequantize kernel; on the gossip backend the q8
         collective schedules advance the sharded mesh EF state in-graph.
         The advanced state is returned in the log under ``"wire"``.
+
+        ``faults``: optional `repro.faults.signals.FaultSignals` — in-graph
+        corrupt-wire injection. Flagged nodes' effective payloads arrive
+        bit-flipped; the per-payload checksum (`comms.payload_checksum`)
+        detects the damage and the sender is quarantined for the round
+        (reject-and-keep-local: excluded from the merge AND gated off, so
+        nobody — including the sender — commits corrupted bytes). Only the
+        wire-carrying host/engine path supports injection; pass drops
+        (membership masking) elsewhere. Both ``faults`` fields are runtime
+        data, so arming/disarming never retraces.
         """
         n = self.cfg.n_nodes
         a = (jnp.ones((n,), bool) if active is None
@@ -626,6 +644,12 @@ class SwarmEngine:
         wire = self._auto_wire(params, wire)
         use_wire = wire is not None and self.backend == "host"
         use_mesh_wire = wire is not None and self.backend == "gossip"
+        if faults is not None and not use_wire:
+            raise ValueError(
+                "in-graph corrupt-wire injection (faults=) requires the "
+                "engine backend with a quantized/EF wire (SwarmState.wire); "
+                "lower corrupt events to drops instead "
+                "(FaultPlan.lower(corrupt_in_graph=False))")
         log = {}
         if use_wire:
             if self.cfg.lora_only:
@@ -637,6 +661,17 @@ class SwarmEngine:
             # is exactly this round's quantization error)
             eff_payload = comms.wire_effective(payload, wire, self.wire_dtype,
                                                self.wire_block)
+            if faults is not None:
+                # sender-side checksum of the honest reconstruction, then
+                # the (deterministic, seeded) wire damage, then the
+                # receiver-side checksum: a mismatch quarantines the sender
+                # for this round exactly like an absence.
+                sent = comms.payload_checksum(eff_payload)
+                eff_payload = flip_payload_bits(eff_payload, faults.corrupt,
+                                                faults.key)
+                wire_ok = jnp.equal(sent, comms.payload_checksum(eff_payload))
+                a = a & wire_ok
+                log["wire_ok"] = wire_ok
             eff = (combine(eff_payload, base) if base is not None
                    else eff_payload)
             fishers = None
@@ -655,7 +690,7 @@ class SwarmEngine:
                 # ratio is scale-free)
                 fishers = comms.quant_dequant_tree(f, self.wire_dtype,
                                                    self.wire_block)
-            candidate, W, imp = self.propose(eff, active, fishers=fishers,
+            candidate, W, imp = self.propose(eff, a, fishers=fishers,
                                              stats=None)
         elif use_mesh_wire:
             # sharded mesh EF wire: the q8 collective schedule quantizes,
@@ -671,6 +706,14 @@ class SwarmEngine:
         metric_merged = jnp.where(a, self._veval(candidate, val), 0.0)
         gates = gate_decisions(metric_merged, metric_local,
                                self.cfg.val_threshold) & a
+        q = self.quorum
+        if q > 0:
+            # degradation policy: below quorum the whole round holds locals
+            # — every gate closes and the sync is a no-op commit. In-graph
+            # on the runtime mask, so membership swings never retrace.
+            quorum_ok = jnp.sum(a.astype(jnp.int32)) >= q
+            gates = gates & quorum_ok
+            log["quorum_ok"] = quorum_ok
         if use_wire:
             committed_payload, new_wire = fused_quant_merge_tree(
                 payload, wire, W, gates, imp=imp,
@@ -691,13 +734,14 @@ class SwarmEngine:
     # -- jitted drivers ------------------------------------------------------
 
     def _round(self, params, opt_state, batches, val, active=None, step0=0,
-               stats=None, wire=None):
+               stats=None, wire=None, faults=None):
         """T local steps + one gated sync — a single compiled program."""
         if stats is None:
             stats = self.init_stats(params)
         params, opt_state, stats, train_metrics = self.local_steps(
             params, opt_state, batches, step0, stats)
-        params, log = self.sync(params, val, active, stats=stats, wire=wire)
+        params, log = self.sync(params, val, active, stats=stats, wire=wire,
+                                faults=faults)
         out = dict(log, train=train_metrics)
         if stats is not None:
             out["stats"] = stats

@@ -480,6 +480,25 @@ def init_mesh_wire(schedule: str, payload, *, n_shards: int,
     raise ValueError(f"no mesh wire state for schedule {schedule!r}")
 
 
+def reset_mesh_wire(wire):
+    """Quarantine the WHOLE mesh EF wire state (crash→rejoin recovery).
+
+    Per-node row surgery is unsafe here: the q8 ring/hier schedules carry
+    neighbour replicas ("left"/"right") that must track the sender's "ref"
+    bit-exactly — zeroing one node's reference without zeroing every
+    replica of it (sharded on other devices) would desynchronize the
+    telescoping residual and the divergence would be committed as if it
+    were quantization error. A full reset keeps every replica trivially
+    consistent: the next sync retransmits full quantized payloads
+    everywhere and EF re-settles within a few rounds (see docs/faults.md).
+
+    ``x * 0`` (not ``zeros_like``) so shardings and replication of the
+    schedule-shaped pytree are preserved leaf-by-leaf.
+    """
+    return jax.tree.map(lambda x: None if x is None else x * 0,
+                        wire, is_leaf=lambda v: v is None)
+
+
 def ring_rows_gossip_q8(stacked, W, wire, mesh, axis: str, inner_specs=None,
                         wire_block: int = 512):
     """int8-EF form of :func:`ring_rows_gossip`: the two ppermutes move int8

@@ -307,16 +307,45 @@ class SwarmSession:
         self._state = dataclasses.replace(
             self._state, active=self._state.active.at[node].set(value))
 
+    def quarantine_wire(self, node: Optional[int] = None) -> None:
+        """Reset the error-feedback wire state for a crash→rejoin.
+
+        A node that left and came back holds a θ̂ reference the survivors
+        kept advancing without it — telescoping against the stale reference
+        would commit the divergence as if it were quantization error, so
+        the rejoiner's EF state must be quarantined before its first sync.
+
+        engine backend: zero ONE node's rows of the θ̂ reference (the next
+        sync retransmits that node's full payload; everyone else's EF
+        residual is untouched). gossip backend: the mesh EF pytree is a
+        schedule-shaped sharded structure whose neighbour replicas must
+        track the reference bit-exactly, so per-node surgery is unsafe —
+        the whole mesh wire resets (`gossip.reset_mesh_wire`) and EF
+        re-settles for everyone. No-op without wire state or on the host
+        backend (uncompressed). Pure data update: never retraces.
+        """
+        if self.backend == "host" or self._state.wire is None:
+            return
+        wire = self._state.wire
+        if self.backend == "engine" and node is not None:
+            new_wire = jax.tree.map(
+                lambda x: None if x is None else x.at[node].set(0),
+                wire, is_leaf=lambda v: v is None)
+        else:
+            from repro.core import gossip
+            new_wire = gossip.reset_mesh_wire(wire)
+        self._state = dataclasses.replace(self._state, wire=new_wire)
+
     # -- compiled round bodies (engine / gossip backends) --------------------
     # Thin SwarmState adapters over the engine's round implementations — the
     # serial and stale-by-one overlap scan bodies have exactly one home
     # (`SwarmEngine._round` / `_run_rounds` / `_run_local`).
 
-    def _round_impl(self, state: SwarmState, batches, val):
+    def _round_impl(self, state: SwarmState, batches, val, faults=None):
         t = jax.tree.leaves(batches)[0].shape[0]
         p, o, out = self.engine._round(state.params, state.opt_state, batches,
                                        val, state.active, state.step,
-                                       state.stats, state.wire)
+                                       state.stats, state.wire, faults)
         st = out.pop("stats", None)
         wr = out.pop("wire", state.wire)
         new = SwarmState(
@@ -351,7 +380,7 @@ class SwarmSession:
 
     # -- drivers -------------------------------------------------------------
 
-    def round(self, batches, val):
+    def round(self, batches, val, faults=None):
         """One full round: ``sync_every`` local steps + gated sync.
 
         engine/gossip: ``batches`` is a stacked ``[T, N, ...]`` pytree, the
@@ -363,10 +392,19 @@ class SwarmSession:
         ``gates``/``metric_local``/``metric_merged`` keys as Python lists,
         plus ``step``/``spectral_gap``; per-step train metrics live in each
         node's ``history`` instead of a ``train`` key.
+
+        ``faults``: optional `repro.faults.signals.FaultSignals` for
+        in-graph corrupt-wire injection (engine backend with a quantized
+        wire only — see `SwarmEngine.sync`). Thread a signal (possibly
+        `faults.idle_signals`) every round to keep one compiled trace.
         """
         if self.backend == "host":
+            if faults is not None:
+                raise ValueError(
+                    "in-graph fault injection (faults=) needs a compiled "
+                    "backend; lower corrupt events to drops on the host loop")
             return self._host_round(batches, val)
-        self._state, out = self._round_jit(self._state, batches, val)
+        self._state, out = self._round_jit(self._state, batches, val, faults)
         return out
 
     def run_rounds(self, batches, val):

@@ -179,6 +179,14 @@ class SwarmLearner:
             jnp.asarray(metric_merged), jnp.asarray(metric_local),
             self.cfg.val_threshold, mode="relative"))
         gates &= np.asarray(active)
+        quorum = int(getattr(self.cfg, "quorum", 0) or 0)
+        quorum_ok = True
+        if quorum > 0:
+            # same degradation policy as the compiled backends: below
+            # quorum the round holds every node's locals (gates all closed)
+            quorum_ok = int(np.asarray(active).sum()) >= quorum
+            if not quorum_ok:
+                gates[:] = False
 
         committed = engine_lib.commit_host(stacked, candidate, W_eff, gates,
                                            self.cfg, imp=imp)
@@ -187,6 +195,8 @@ class SwarmLearner:
         log = {"step": self.step, "gates": gates.tolist(),
                "metric_local": metric_local, "metric_merged": metric_merged,
                "spectral_gap": topo.spectral_gap(W)}
+        if quorum > 0:
+            log["quorum_ok"] = bool(quorum_ok)
         self.sync_log.append(log)
         return log
 

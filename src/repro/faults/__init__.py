@@ -1,0 +1,33 @@
+"""Chaos plane: deterministic fault injection + graceful degradation.
+
+The paper's headline claim is *robust* decentralized diagnostics — node
+dropout tolerance is the core advantage P2P sync has over a coordinator.
+This package makes failures first-class and injectable:
+
+  * :mod:`repro.faults.plan`    — seeded, declarative :class:`FaultPlan`
+    (crash / straggle / drop / corrupt / preempt events) lowered to
+    per-round membership masks and in-graph corruption signals;
+  * :mod:`repro.faults.signals` — :class:`FaultSignals`, the pytree the
+    compiled round consumes, and the deterministic bit-flip injector for
+    the quantized wire;
+  * :mod:`repro.faults.runner`  — drives a `SwarmSession` through a plan
+    (active-mask updates, EF quarantine on rejoin, preempt + restore)
+    without ever leaving the compiled round's trace;
+  * :mod:`repro.faults.oracle`  — the fault-free / faulted numpy reference
+    the parity tests compare committed params against;
+  * :mod:`repro.faults.retry`   — bounded retry/backoff/timeout for
+    host-side I/O (the single sanctioned home for retry loops —
+    swarmlint SWL007).
+
+See docs/faults.md for the plan grammar and the degradation policies.
+"""
+from repro.faults.plan import FaultEvent, FaultPlan, LoweredPlan
+from repro.faults.retry import RetryError, with_retry
+from repro.faults.runner import run_plan
+from repro.faults.signals import FaultSignals, flip_payload_bits, idle_signals
+
+__all__ = [
+    "FaultEvent", "FaultPlan", "LoweredPlan", "FaultSignals",
+    "flip_payload_bits", "idle_signals", "RetryError", "with_retry",
+    "run_plan",
+]

@@ -1,0 +1,151 @@
+"""Numpy oracle for fault-plan parity tests.
+
+Replicates, in float64 numpy, the committed-params trajectory of the
+compiled round for the canonical toy dynamics the fault tests drive:
+single-leaf ``[N, D]`` params, per-node linear pull toward fixed targets
+(``x ← x + lr·(t − x)``), Δθ² EMA importance accumulation, and the exact
+merge formulas of `repro.core.merge_impl` / `repro.core.engine` under a
+per-round membership mask:
+
+  * mean/fedavg: the membership-masked mixing matrix
+    (`topology.dynamic_matrix` over the normalized-weight base — the
+    numpy twin of ``mixing_matrix_traced``);
+  * fisher/gradmatch: mask-then-normalize Fisher mass
+    (``finalize_mass``), the eps-floored ratio merge (`fisher_merge` /
+    `gradmatch_merge` on full topology, `topo_weighted_merge` rows on
+    ring/dynamic);
+  * gating: an always-accepting eval (threshold 0) masked by membership,
+    optionally held closed by the ``quorum`` policy;
+  * corrupt quarantine: a checksum-rejected sender is excluded from the
+    sync exactly like an absent node for that one round.
+
+The oracle is exact f32-free math: engine parity holds to ~1e-6 on the
+uncompressed wire and to the settled ≤1e-5 bound on the quantized (EF)
+wire once the telescoping residual has converged (see docs/faults.md).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import repro.core.topology as topo
+
+
+def mixing_matrix(topology: str, active, *, weights=None,
+                  self_weight: float = 0.5) -> np.ndarray:
+    """Numpy twin of ``topology.mixing_matrix_traced``: normalized-weight
+    base matrix, then membership masking + row renormalization."""
+    a = np.asarray(active, bool)
+    n = a.shape[0]
+    if topology in ("full", "dynamic"):
+        if weights is None:
+            w = np.full(n, 1.0 / n)
+        else:
+            w = np.asarray(weights, np.float64)
+            w = w / max(w.sum(), 1e-30)
+        base = np.tile(w[None, :], (n, 1))
+    elif topology == "ring":
+        base = topo.ring_matrix(n, self_weight)
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    return topo.dynamic_matrix(base, a)
+
+
+def active_weights(data_sizes, active) -> np.ndarray:
+    """Numpy twin of ``engine.active_weights_traced``."""
+    w = np.asarray(data_sizes, np.float64) * np.asarray(active, np.float64)
+    s = w.sum()
+    if s <= 0:
+        return np.full(len(w), 1.0 / len(w))
+    return w / s
+
+
+def finalize_mass(stats: np.ndarray, active) -> np.ndarray:
+    """Mask-then-normalize (strategy ``finalize_mass``): zero departed
+    nodes' mass, then scale the whole stack to a global mean of 1."""
+    a = np.asarray(active, np.float64)
+    masked = np.asarray(stats, np.float64) * a[:, None]
+    mean = masked.sum() / masked.size
+    scale = 1.0 / max(mean, 1e-30) if mean > 0 else 1.0
+    return masked * scale
+
+
+def merge_candidate(x: np.ndarray, active, *, merge: str, topology: str,
+                    stats: Optional[np.ndarray] = None, data_sizes=None,
+                    self_weight: float = 0.5, eps: float = 1e-8) -> np.ndarray:
+    """The round's merge candidate for every node ([N, D] -> [N, D])."""
+    x = np.asarray(x, np.float64)
+    a = np.asarray(active, bool)
+    n = x.shape[0]
+    sizes = (np.ones(n) if data_sizes is None
+             else np.asarray(data_sizes, np.float64))
+    if merge in ("mean", "fedavg"):
+        W = mixing_matrix(topology, a,
+                          weights=sizes if merge == "fedavg" else None,
+                          self_weight=self_weight)
+        return W @ x
+    if merge not in ("fisher", "gradmatch"):
+        raise ValueError(f"unknown merge {merge!r}")
+    mass = finalize_mass(np.zeros_like(x) if stats is None else stats, a)
+    w = active_weights(sizes, a)
+    ff = mass + eps
+    if topology in ("ring", "dynamic"):
+        # topology-restricted ratio over graph-neighbour rows
+        W = mixing_matrix(topology, a, weights=None, self_weight=self_weight)
+        rows = W if merge == "fisher" else W * w[None, :]
+        num = rows @ (ff * x)
+        den = rows @ ff
+        return num / np.maximum(den, 1e-30)
+    if merge == "fisher":
+        merged = (ff * x).sum(0) / ff.sum(0)
+        return np.broadcast_to(merged, x.shape).copy()
+    # gradmatch, full topology: θ̄ + Σ w(F/F̄ − 1)(θ − θ̄)
+    wb = w[:, None]
+    mean = (wb * x).sum(0)
+    fbar = (wb * ff).sum(0)
+    corr = (wb * (ff / fbar - 1.0) * (x - mean)).sum(0)
+    return np.broadcast_to(mean + corr, x.shape).copy()
+
+
+def commit(x: np.ndarray, cand: np.ndarray, active, *,
+           quorum: int = 0) -> np.ndarray:
+    """Gated commit with an always-accepting eval: active nodes take the
+    candidate unless the quorum policy holds the whole round's locals."""
+    a = np.asarray(active, bool)
+    gates = a.copy()
+    if quorum > 0 and int(a.sum()) < quorum:
+        gates[:] = False
+    return np.where(gates[:, None], cand, np.asarray(x, np.float64))
+
+
+def simulate(x0: np.ndarray, targets: np.ndarray, active_rounds: np.ndarray,
+             *, merge: str, topology: str, lr: float = 0.0,
+             steps_per_round: int = 0, data_sizes=None,
+             self_weight: float = 0.5, fisher_decay: float = 0.95,
+             eps: float = 1e-8, quorum: int = 0,
+             corrupt_rounds: Optional[np.ndarray] = None) -> np.ndarray:
+    """Full faulted trajectory: per round, ``steps_per_round`` linear local
+    steps (Δθ² EMA accumulation), then the masked gated sync. Returns the
+    committed params after every round, ``[R, N, D]``. ``corrupt_rounds``
+    rows are quarantined senders — excluded from the sync like absences."""
+    x = np.array(x0, np.float64)
+    t = np.asarray(targets, np.float64)
+    st = np.zeros_like(x)
+    out = []
+    for r in range(active_rounds.shape[0]):
+        for _ in range(steps_per_round):
+            d = lr * (t - x)
+            st = fisher_decay * st + d * d
+            x = x + d
+        a = active_rounds[r].astype(bool).copy()
+        if corrupt_rounds is not None:
+            a &= ~corrupt_rounds[r].astype(bool)
+        cand = merge_candidate(x, a, merge=merge, topology=topology,
+                               stats=st if merge in ("fisher", "gradmatch")
+                               else None,
+                               data_sizes=data_sizes,
+                               self_weight=self_weight, eps=eps)
+        x = commit(x, cand, a, quorum=quorum)
+        out.append(x.copy())
+    return np.stack(out)

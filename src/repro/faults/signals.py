@@ -1,0 +1,91 @@
+"""In-graph fault signals for the compiled round.
+
+:class:`FaultSignals` is the pytree `SwarmEngine.sync` consumes to inject
+wire corruption *inside* the compiled program: both fields are runtime
+data, so arming / disarming corruption between rounds never retraces —
+the runner threads a (possibly all-False) signal every round and only the
+array values change.
+
+:func:`flip_payload_bits` is the deterministic corruptor: for every node
+flagged in ``corrupt`` it XORs bit ``bit`` (a mid-mantissa f32 bit — a
+~2⁻³ relative perturbation that stays finite, never NaN/Inf) into a
+seeded pseudo-random ~``rate`` subset of the node's payload elements,
+plus always the first element of every leaf so at least one bit flips
+regardless of payload size. The per-payload checksum
+(`repro.core.comms.payload_checksum`) must detect the flip and the sync
+must quarantine the sender (reject-and-keep-local) — see docs/faults.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class FaultSignals:
+    """Per-round corruption directive, as data.
+
+    ``corrupt``: [N] bool — nodes whose *outgoing* wire payload arrives
+    bit-flipped this round. ``key``: a (legacy uint32[2]) PRNG key fixing
+    the flip pattern; derive it per round with :func:`plan_key` so a
+    seeded plan replays bit-identically.
+    """
+
+    corrupt: Any
+    key: Any
+
+
+jax.tree_util.register_dataclass(
+    FaultSignals, data_fields=["corrupt", "key"], meta_fields=[])
+
+
+def plan_key(seed: int, round_index: int):
+    """Deterministic per-round key: (plan seed, round) as raw key data."""
+    return jnp.asarray([seed & 0xFFFFFFFF, round_index & 0xFFFFFFFF],
+                       jnp.uint32)
+
+
+def idle_signals(n_nodes: int) -> FaultSignals:
+    """The no-fault signal (same pytree structure as an armed one, so a
+    fault-free round through the faulted entry point shares its trace)."""
+    return FaultSignals(corrupt=jnp.zeros((n_nodes,), bool),
+                        key=jnp.zeros((2,), jnp.uint32))
+
+
+def signals_for_round(plan, lowered, round_index: int) -> FaultSignals:
+    """The round's :class:`FaultSignals` from a lowered plan."""
+    return FaultSignals(
+        corrupt=jnp.asarray(lowered.corrupt[round_index]),
+        key=plan_key(plan.seed, round_index))
+
+
+def flip_payload_bits(payload, corrupt, key, *, bit: int = 20,
+                      rate: float = 1.0 / 16):
+    """Deterministically bit-flip the payload rows of ``corrupt`` nodes.
+
+    ``payload``: stacked pytree, leaves [N, ...] (None leaves pass
+    through). Rows of nodes with ``corrupt[i] == False`` are returned
+    bit-identical. Traceable; the flip pattern depends only on
+    ``(key, leaf index, leaf shape)``.
+    """
+    cb = jnp.asarray(corrupt).astype(bool)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        payload, is_leaf=lambda v: v is None)
+    out = []
+    for i, x in enumerate(leaves):
+        if x is None:
+            out.append(None)
+            continue
+        xf = jnp.asarray(x, jnp.float32)
+        n = xf.shape[0]
+        u = jax.lax.bitcast_convert_type(xf, jnp.uint32).reshape(n, -1)
+        flips = jax.random.bernoulli(jax.random.fold_in(key, i), rate,
+                                     u.shape)
+        flips = flips.at[:, 0].set(True)   # ≥1 guaranteed flip per node row
+        hit = (flips & cb[:, None]).astype(jnp.uint32) << bit
+        out.append(jax.lax.bitcast_convert_type(
+            (u ^ hit).reshape(xf.shape), jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, out)

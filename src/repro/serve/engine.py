@@ -50,7 +50,7 @@ from repro.serve.queue import Request, RequestQueue
 AGG_MODES = ("consensus", "average", "per_node", "topk")
 
 
-def aggregate_logits(logits, mode: str, top_k: int = 2):
+def aggregate_logits(logits, mode: str, top_k: int = 2, node_mask=None):
     """Traced ensemble aggregation: per-node logits [N, B, V] -> the next
     token each node continues with, [N, B] int32.
 
@@ -66,23 +66,56 @@ def aggregate_logits(logits, mode: str, top_k: int = 2):
     per_node
         No aggregation: every node decodes its own stream — the per-site
         diversity view (N divergent sequences per request).
+
+    ``node_mask`` ([N] bool, optional) drops crashed/quarantined ensemble
+    lanes from the aggregate: masked nodes cast no vote, contribute no
+    probability mass, and can never be selected by ``topk``. It is runtime
+    DATA — flipping it between ticks re-aggregates over the survivors with
+    zero retraces. ``None`` (the default) is the historical unmasked math,
+    bit-for-bit.
     """
     n, b, v = logits.shape
     if mode == "per_node":
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     probs = jax.nn.softmax(logits, axis=-1)                       # [N, B, V]
+    if node_mask is None:
+        if mode == "consensus":
+            votes = jax.nn.one_hot(jnp.argmax(logits, -1), v)     # [N, B, V]
+            score = votes.sum(0) + probs.mean(0) / (n + 1.0)
+            winner = jnp.argmax(score, -1)                        # [B]
+        elif mode == "average":
+            winner = jnp.argmax(probs.mean(0), -1)
+        elif mode == "topk":
+            conf = probs.max(-1)                                  # [N, B]
+            _, idx = jax.lax.top_k(conf.T, top_k)                 # [B, k]
+            sel = jnp.take_along_axis(
+                jnp.moveaxis(probs, 0, 1), idx[..., None], axis=1)  # [B,k,V]
+            winner = jnp.argmax(sel.mean(1), -1)
+        else:
+            raise ValueError(f"unknown aggregation mode {mode!r}; "
+                             f"expected one of {AGG_MODES}")
+        return jnp.broadcast_to(winner[None], (n, b)).astype(jnp.int32)
+    m = jnp.asarray(node_mask).astype(probs.dtype)                # [N]
+    n_act = jnp.maximum(m.sum(), 1.0)
     if mode == "consensus":
-        votes = jax.nn.one_hot(jnp.argmax(logits, -1), v)         # [N, B, V]
-        score = votes.sum(0) + probs.mean(0) / (n + 1.0)
-        winner = jnp.argmax(score, -1)                            # [B]
+        votes = jax.nn.one_hot(jnp.argmax(logits, -1), v) * m[:, None, None]
+        pmean = (probs * m[:, None, None]).sum(0) / n_act
+        score = votes.sum(0) + pmean / (n_act + 1.0)
+        winner = jnp.argmax(score, -1)
     elif mode == "average":
-        winner = jnp.argmax(probs.mean(0), -1)
+        winner = jnp.argmax((probs * m[:, None, None]).sum(0) / n_act, -1)
     elif mode == "topk":
-        conf = probs.max(-1)                                      # [N, B]
+        # masked lanes sink below every real confidence, so top_k only
+        # surfaces them when fewer than k survivors exist — and then their
+        # zero ``valid`` weight still keeps them out of the average
+        conf = jnp.where(m[:, None] > 0, probs.max(-1), -1.0)     # [N, B]
         _, idx = jax.lax.top_k(conf.T, top_k)                     # [B, k]
+        valid = jnp.take(m, idx)                                  # [B, k]
         sel = jnp.take_along_axis(
             jnp.moveaxis(probs, 0, 1), idx[..., None], axis=1)    # [B, k, V]
-        winner = jnp.argmax(sel.mean(1), -1)
+        weighted = ((sel * valid[..., None]).sum(1)
+                    / jnp.maximum(valid.sum(1), 1.0)[..., None])
+        winner = jnp.argmax(weighted, -1)
     else:
         raise ValueError(f"unknown aggregation mode {mode!r}; "
                          f"expected one of {AGG_MODES}")
@@ -109,6 +142,7 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, mode: str = "consensus",
                  top_k: int = 2, max_len: int = 64, max_slots: int = 8,
                  policy: Optional[BucketPolicy] = None,
+                 max_pending: Optional[int] = None,
                  now=time.perf_counter):
         if mode not in AGG_MODES:
             raise ValueError(f"unknown mode {mode!r}; expected {AGG_MODES}")
@@ -127,8 +161,12 @@ class ServeEngine:
         self.n_nodes = int(jax.tree_util.tree_leaves(self.slot.live)[0].shape[0])
         self._logits_step = make_logits_step(model)
         self._now = now
-        self.queue = RequestQueue(now=now)
+        self.queue = RequestQueue(now=now, max_pending=max_pending)
         self.completed: List[Request] = []
+        # ensemble-lane health: a crashed node's lane is dropped from every
+        # aggregation (runtime data — flips never retrace); per_node mode
+        # keeps decoding all lanes (each stream is already independent)
+        self._node_mask = np.ones(self.n_nodes, bool)
         # (kind, shape) -> number of traces; the python bodies below run only
         # at trace time, so steady-state serving and hot-swaps keep these flat
         self.trace_counts = collections.defaultdict(int)
@@ -146,9 +184,12 @@ class ServeEngine:
 
     # -- jitted cores -------------------------------------------------------
 
-    def _decode_commit_impl(self, params, caches, tokens, pos, live):
+    def _decode_commit_impl(self, params, caches, tokens, pos, live,
+                            node_mask):
         """One batched ensemble decode tick: tokens [N,B], pos [B], live [B]
-        -> (aggregated next tokens [N,B], caches with live lanes advanced)."""
+        -> (aggregated next tokens [N,B], caches with live lanes advanced).
+        ``node_mask`` [N] drops crashed lanes from the aggregate (data, not
+        structure — consensus re-forms over survivors with zero retraces)."""
         self.trace_counts["decode", tokens.shape[1]] += 1
 
         def slot_step(p, tok, cache, q):
@@ -160,7 +201,8 @@ class ServeEngine:
                 p, toks, node_caches, pos)
 
         logits, new_caches = jax.vmap(node_step)(params, tokens, caches)
-        nxt = aggregate_logits(logits, self.mode, self.top_k)
+        nxt = aggregate_logits(logits, self.mode, self.top_k,
+                               node_mask=node_mask)
 
         def commit(old, new):
             mask = live.reshape((1, live.shape[0]) + (1,) * (new.ndim - 2))
@@ -168,7 +210,8 @@ class ServeEngine:
 
         return nxt, jax.tree.map(commit, caches, new_caches)
 
-    def _prefill_commit_impl(self, params, caches, prompt, slot, length):
+    def _prefill_commit_impl(self, params, caches, prompt, slot, length,
+                             node_mask):
         """Ensemble prefill of ONE slot: padded prompt [S] -> per-node first
         tokens [N]; the slot's cache lane is replaced in place."""
         table = jax.tree_util.tree_leaves(caches)[0].shape[1]
@@ -182,7 +225,7 @@ class ServeEngine:
 
         logits, slot_cache = jax.vmap(node_prefill)(params)
         first = aggregate_logits(logits[:, None, :], self.mode,
-                                 self.top_k)[:, 0]
+                                 self.top_k, node_mask=node_mask)[:, 0]
         caches = jax.tree.map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
                 full, new, slot, axis=1),
@@ -235,14 +278,51 @@ class ServeEngine:
     def total_traces(self) -> int:
         return sum(self.trace_counts.values())
 
-    def submit(self, prompt, max_new: int) -> Request:
+    @property
+    def node_mask(self) -> np.ndarray:
+        return self._node_mask.copy()
+
+    def fail_node(self, node: int) -> None:
+        """Drop one ensemble lane from every aggregation, effective the very
+        next dispatch — in-flight requests keep decoding, their consensus
+        re-forms over the surviving lanes (no retrace, no drop)."""
+        mask = self._node_mask.copy()
+        mask[node] = False
+        self.set_node_mask(mask)
+
+    def restore_node(self, node: int) -> None:
+        """Re-admit a recovered lane to the aggregate."""
+        mask = self._node_mask.copy()
+        mask[node] = True
+        self.set_node_mask(mask)
+
+    def set_node_mask(self, mask) -> None:
+        mask = np.asarray(mask, bool).reshape(-1)
+        if mask.shape[0] != self.n_nodes:
+            raise ValueError(f"node mask has {mask.shape[0]} entries, the "
+                             f"ensemble has {self.n_nodes} nodes")
+        if not mask.any():
+            raise ValueError("cannot fail every ensemble lane: at least one "
+                             "node must survive to serve")
+        self._node_mask = mask
+
+    def submit(self, prompt, max_new: int,
+               deadline_s: Optional[float] = None) -> Request:
+        """Enqueue a request. ``deadline_s`` is a wall-clock budget from
+        submission: once elapsed the request lands in terminal
+        ``deadline_exceeded`` (queued or mid-decode; emitted tokens kept).
+        A bounded queue (``max_pending``) may return the request already
+        terminal ``rejected`` — explicit backpressure, never enqueued."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         self.policy.seq_bucket(prompt.size)   # must fit a bucket
         if prompt.size + max_new > self.max_len:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new ({max_new}) exceeds the "
                 f"cache depth max_len={self.max_len}")
-        return self.queue.submit(prompt, max_new)
+        req = self.queue.submit(prompt, max_new, deadline_s=deadline_s)
+        if req.status == "rejected":
+            self.completed.append(req)
+        return req
 
     def swap(self, params) -> int:
         """Publish a new stacked ensemble; in-flight requests finish on the
@@ -254,9 +334,12 @@ class ServeEngine:
         return self.slot.ingest(path, expect_nodes=self.n_nodes)
 
     def step(self) -> List[Request]:
-        """One scheduler tick: admit -> decode -> harvest. Returns the
-        requests that completed this tick."""
+        """One scheduler tick: expire -> admit -> decode -> harvest. Returns
+        the requests that reached a terminal state this tick (``done`` OR
+        ``deadline_exceeded`` — check ``status``)."""
         done: List[Request] = []
+        done.extend(self.queue.expire())        # queued past-deadline sweeps
+        self._expire_live(done)                 # mid-decode deadline sweeps
         self._admit(done)
         if self._live.any():
             self._decode_tick(done)
@@ -266,11 +349,19 @@ class ServeEngine:
         return done
 
     def drain(self, max_ticks: int = 100_000) -> List[Request]:
-        """Tick until the queue and all slots are empty."""
+        """Tick until the queue and all slots are empty.
+
+        Raises ``TimeoutError`` naming the stuck work — live ``(slot,
+        rid)`` pairs and still-queued rids — if the budget runs out."""
         done: List[Request] = []
         while len(self.queue) or self._live.any():
             if max_ticks <= 0:
-                raise RuntimeError("drain did not converge")
+                stuck = [(int(s), self._reqs[s].rid)
+                         for s in np.flatnonzero(self._live)]
+                queued = [r.rid for r in self.queue.pending]
+                raise TimeoutError(
+                    f"drain did not converge: live slots (slot, rid) "
+                    f"{stuck}, queued rids {queued}")
             max_ticks -= 1
             done.extend(self.step())
         return done
@@ -292,10 +383,11 @@ class ServeEngine:
         version = self.slot.version
         first, self._caches = self._prefill_commit(
             self.slot.buffer(version), self._caches, jnp.asarray(padded),
-            jnp.int32(slot), jnp.int32(length))
+            jnp.int32(slot), jnp.int32(length), jnp.asarray(self._node_mask))
         first = np.asarray(first)                                 # [N]
         req.param_version = version
         req.admit_t = self._now()
+        req.status = "live"
         req.node_tokens.append(first)
         self._reqs[slot] = req
         self._live[slot] = True
@@ -314,7 +406,7 @@ class ServeEngine:
             nxt, self._caches = self._decode_commit(
                 self.slot.buffer(version), self._caches,
                 jnp.asarray(self._tokens), jnp.asarray(self._pos),
-                jnp.asarray(mask))
+                jnp.asarray(mask), jnp.asarray(self._node_mask))
             nxt = np.asarray(nxt)                                 # [N, B]
             for slot in np.flatnonzero(mask):
                 req = self._reqs[slot]
@@ -324,9 +416,21 @@ class ServeEngine:
                 if len(req.node_tokens) >= req.max_new:
                     done.append(self._finish(int(slot)))
 
-    def _finish(self, slot: int) -> Request:
+    def _expire_live(self, done: List[Request]) -> None:
+        """Finish live slots whose wall-clock deadline elapsed — the lane
+        frees immediately; tokens already emitted stay on the request."""
+        now = self._now()
+        for slot in np.flatnonzero(self._live):
+            req = self._reqs[slot]
+            if (req.deadline_s is not None
+                    and now - req.submit_t >= req.deadline_s):
+                done.append(self._finish(int(slot),
+                                         status="deadline_exceeded"))
+
+    def _finish(self, slot: int, status: str = "done") -> Request:
         req = self._reqs[slot]
         req.finish_t = self._now()
+        req.status = status
         self._live[slot] = False
         self._reqs[slot] = None
         return req

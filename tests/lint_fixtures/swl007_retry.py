@@ -1,0 +1,52 @@
+# swarmlint: treat-as=src/repro/checkpointing/fixture_swl007.py
+"""SWL007 fixture: hand-rolled retry loops in library code.
+
+Masquerades as host-side checkpointing code. A loop that both catches
+exceptions and sleeps is re-implementing bounded retry/backoff ad hoc —
+every such loop must delegate to `repro.faults.retry.with_retry`, the one
+home for attempt bounds, exponential backoff, and timeout budgets.
+A try/except loop that never sleeps (an event pump) and a sleeping loop
+that never catches (a pacer) are both fine.
+"""
+import time
+
+from repro.faults.retry import with_retry
+
+
+def bad_write_retries(write, attempts=3):
+    for i in range(attempts):  # LINT-EXPECT: SWL007
+        try:
+            return write()
+        except OSError:
+            time.sleep(0.05 * (2 ** i))
+    raise RuntimeError("write failed")
+
+
+def bad_poll_until_ready(probe):
+    while True:  # LINT-EXPECT: SWL007
+        try:
+            return probe()
+        except ConnectionError:
+            pass
+        time.sleep(0.1)
+
+
+def good_write(write):
+    return with_retry(write, attempts=3, retry_on=(OSError,),
+                      describe="fixture write")
+
+
+def good_event_loop(pop):
+    while True:
+        try:
+            event = pop()
+        except KeyError:
+            return None
+        if event is not None:
+            return event
+
+
+def good_paced_loop(tick, n):
+    for _ in range(n):
+        tick()
+        time.sleep(0.01)

@@ -1,0 +1,201 @@
+"""Chaos plane on the mesh (ISSUE 9): fault plans against the q8 gossip
+backend.
+
+All checks need >1 device, so they run in ONE subprocess with XLA_FLAGS
+forcing 4 host devices (same pattern as test_mesh_wire_spmd), each printing
+an ``OK <tag>`` marker the tests assert on. Pins the gossip half of the
+acceptance criteria:
+
+  * crash → EF quarantine → rejoin on the sharded int8 wire settles back to
+    the fault-free numpy oracle (committed params ≤ 1e-5),
+  * a preempt event mid-fault-plan (``session.save`` → fresh session →
+    restore) leaves params AND every mesh-wire leaf bit-identical to the
+    uninterrupted run,
+  * the ``quorum`` degradation policy closes every gate on the gossip
+    backend when membership dips below the floor, and reopens on recovery,
+  * a whole plan (crash / straggle / drop / corrupt-degraded) replays
+    against the compiled gossip round with ZERO retraces.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.spmd
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+_CHECKS = """
+import os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import SwarmConfig
+from repro.core.session import SwarmSession
+from repro.faults import FaultPlan, run_plan
+from repro.faults import oracle
+
+mesh = jax.make_mesh((4,), ("node",), devices=jax.devices()[:4])
+N, D, WB = 4, 640, 128
+rng = np.random.default_rng(0)
+w0 = jnp.asarray(rng.normal(0, 1, (N, D)), jnp.float32)
+
+def id_step(p, o, b, s):
+    return p, o, {"loss": 0.0 * jnp.sum(p["w"])}
+
+def decay_step(p, o, b, s):
+    return {"w": p["w"] * 0.999}, o, {"loss": 0.0 * jnp.sum(p["w"])}
+
+def eval_fn(p, v):
+    return 1.0 - 0.0 * jnp.sum(p["w"])
+
+batches = jnp.zeros((1, N, 1))
+val = jnp.zeros((N, 1))
+
+def mk_cfg(thr, **kw):
+    kw.setdefault("topology", "ring")
+    kw.setdefault("merge", "fisher")
+    return SwarmConfig(n_nodes=N, sync_every=1, lora_only=False,
+                      val_threshold=thr, wire_dtype="int8", wire_block=WB,
+                      **kw)
+
+GKW = dict(stacked=True, backend="gossip", mesh=mesh, axis="node",
+           data_sizes=[1.0] * N)
+
+# --- crash -> EF quarantine -> rejoin settles to the fault-free oracle ---
+# Phase 1 (reject gates, metric 1.0 < 1.5): params frozen at w0 while the
+# mesh wire telescopes THROUGH the fault — the rejoin's full-mesh
+# quarantine restarts the residual, which re-contracts over the remaining
+# rounds. Phase 2: same state, accepting gates, one committed round — must
+# land on the uncompressed numpy merge of w0 within the settled bound.
+for topo, merge in [("ring", "fisher"), ("full", "fedavg")]:
+    sa = SwarmSession(mk_cfg(1.5, topology=topo, merge=merge), id_step,
+                      eval_fn, params={"w": w0.copy()}, **GKW)
+    plan = FaultPlan(n_nodes=N, n_rounds=9, seed=0).crash(1, at=1, rejoin=3)
+    sa, logs = run_plan(sa, plan, batches, val)
+    assert not any(l["gates"].any() for l in logs), (topo, merge)
+    np.testing.assert_array_equal(np.asarray(sa.state.params["w"]),
+                                  np.asarray(w0))    # reject gates held
+    assert sa.active.all()                           # node 1 rejoined
+    sb = SwarmSession(mk_cfg(0.0, topology=topo, merge=merge), id_step,
+                      eval_fn, params={"w": w0.copy()}, **GKW)
+    sb.load_state(sa.state)
+    out = sb.round(batches, val)
+    assert np.asarray(out["gates"]).all()
+    want = oracle.merge_candidate(np.asarray(w0), np.ones(N, bool),
+                                  merge=merge, topology=topo,
+                                  data_sizes=[1.0] * N)
+    err = np.abs(np.asarray(sb.state.params["w"]) - want).max()
+    assert err < 1e-5, (topo, merge, err)
+print("OK crash_rejoin_parity")
+
+# --- quarantine_wire on gossip resets the WHOLE mesh wire ----------------
+sq = SwarmSession(mk_cfg(1.5), id_step, eval_fn, params={"w": w0.copy()},
+                  **GKW)
+sq.round(batches, val)
+assert any(np.asarray(x).any() for x in jax.tree.leaves(sq.state.wire))
+sq.quarantine_wire(2)      # gossip: neighbour replicas must track ref ->
+                           # per-node surgery is unsafe, the reset is total
+assert not any(np.asarray(x).any() for x in jax.tree.leaves(sq.state.wire))
+print("OK mesh_quarantine")
+
+# --- preempt mid-plan: save -> rebuild -> restore == uninterrupted -------
+tmp = tempfile.mkdtemp()
+def run(plan):
+    sess = SwarmSession(mk_cfg(0.0), decay_step, eval_fn,
+                        params={"w": w0.copy()}, **GKW)
+    mk = lambda: SwarmSession(mk_cfg(0.0), decay_step, eval_fn,
+                              params={"w": w0.copy()}, **GKW)
+    return run_plan(sess, plan, batches, val, make_session=mk,
+                    checkpoint_path=os.path.join(tmp, "preempt.msgpack"))
+
+base = FaultPlan(n_nodes=N, n_rounds=6, seed=0).crash(2, at=1, rejoin=4)
+ra, la = run(base)
+rb, lb = run(base.preempt(at=3))
+np.testing.assert_array_equal(np.asarray(ra.state.params["w"]),
+                              np.asarray(rb.state.params["w"]))
+for x, y in zip(jax.tree.leaves(ra.state.wire), jax.tree.leaves(rb.state.wire)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+assert [l["gates"].tolist() for l in la] == [l["gates"].tolist() for l in lb]
+print("OK preempt_bit_identity")
+
+# --- quorum degradation on the gossip backend ----------------------------
+sp = SwarmSession(mk_cfg(0.0, quorum=3), id_step, eval_fn,
+                  params={"w": w0.copy()}, **GKW)
+sp.set_active([True, False, False, True])    # 2 alive < quorum 3
+out = sp.round(batches, val)
+assert not np.asarray(out["gates"]).any() and not bool(out["quorum_ok"])
+np.testing.assert_array_equal(np.asarray(sp.state.params["w"]),
+                              np.asarray(w0))    # the round held locals
+sp.set_active([True, True, False, True])     # recovery: 3 alive
+out = sp.round(batches, val)
+assert bool(out["quorum_ok"])
+assert np.asarray(out["gates"]).tolist() == [True, True, False, True]
+print("OK gossip_quorum")
+
+# --- a whole plan replays against ONE compiled gossip round --------------
+traces = []
+def counting_step(p, o, b, s):
+    traces.append(1)         # python body: appends only at trace time
+    return p, o, {"loss": 0.0 * jnp.sum(p["w"])}
+
+sc = SwarmSession(mk_cfg(1.5, quorum=2), counting_step, eval_fn,
+                  params={"w": w0.copy()}, **GKW)
+sc.round(batches, val)       # warm the one trace membership swings reuse
+warm = len(traces)
+plan = (FaultPlan(n_nodes=N, n_rounds=8, seed=3)
+        .crash(1, at=1, rejoin=3)
+        .straggle(3, at=4, rounds=1)
+        .drop(0, at=5)
+        .corrupt(2, at=6))   # no in-graph wire on gossip -> lowers to drop
+run_plan(sc, plan, batches, val)
+assert len(traces) == warm, (warm, len(traces))
+print("OK gossip_zero_retrace")
+"""
+
+
+@pytest.fixture(scope="module")
+def spmd_out():
+    return _run(_CHECKS)  # module scope: the subprocess runs once
+
+
+def test_gossip_crash_rejoin_settles_to_oracle(spmd_out):
+    """q8 gossip backend: crash → full-mesh EF quarantine → rejoin, then an
+    accepting commit ≤ 1e-5 of the fault-free numpy merge (ISSUE 9
+    satellite, both ring/fisher and full/fedavg schedules)."""
+    assert "OK crash_rejoin_parity" in spmd_out
+
+
+def test_gossip_quarantine_resets_whole_mesh_wire(spmd_out):
+    """On the mesh wire, quarantine is total: neighbour replicas must stay
+    bit-identical to senders' references, so no per-node surgery."""
+    assert "OK mesh_quarantine" in spmd_out
+
+
+def test_preempt_mid_plan_is_bit_identical(spmd_out):
+    """save → fresh session → restore in the middle of a fault plan leaves
+    params and every mesh-wire leaf bit-identical to never stopping."""
+    assert "OK preempt_bit_identity" in spmd_out
+
+
+def test_gossip_quorum_holds_and_recovers(spmd_out):
+    """Below-quorum membership closes every gate (locals held exactly);
+    recovery reopens them — all in-graph on the runtime mask."""
+    assert "OK gossip_quorum" in spmd_out
+
+
+def test_gossip_plan_replays_with_zero_retraces(spmd_out):
+    """crash / straggle / drop / corrupt-degraded across 8 rounds reuse the
+    single warm compiled round — no retrace, no structure churn."""
+    assert "OK gossip_zero_retrace" in spmd_out

@@ -315,6 +315,139 @@ def test_load_checkpoint_params(tmp_path):
 # engine guard rails
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# degradation under faults (ISSUE 9): deadlines, backpressure, lane crashes
+# ---------------------------------------------------------------------------
+
+def _per_node_peaked(peaks):
+    """Toy params where node i argmaxes to token peaks[i][0] with logit
+    peaks[i][1] — distinct lanes make consensus re-formation observable."""
+    x = np.zeros((len(peaks), V), np.float32)
+    for i, (tok, height) in enumerate(peaks):
+        x[i, tok] = height
+    return {"x": jnp.asarray(x)}
+
+
+def test_status_lifecycle_pending_live_done():
+    eng = ServeEngine(_toy_model(), _peaked(3), max_len=32, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)))
+    req = eng.submit([1, 2], max_new=3)
+    assert req.status == "pending" and not req.done
+    eng.step()
+    assert req.status == "live" and not req.done
+    eng.drain()
+    assert req.status == "done" and req.done and req.finish_t is not None
+
+
+def test_bounded_queue_rejects_with_explicit_backpressure():
+    eng = ServeEngine(_toy_model(), _peaked(3), max_len=32, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)),
+                      max_pending=1)
+    ok = eng.submit([1, 2], max_new=2)
+    rej = [eng.submit([3, 4], max_new=2) for _ in range(2)]
+    # over-limit submits are terminal immediately: never enqueued, never
+    # admitted, already in the completed ledger
+    assert all(r.status == "rejected" and r.done for r in rej)
+    assert all(r.finish_t == r.submit_t and r.tokens == [] for r in rej)
+    assert len(eng.queue) == 1 and [r.rid for r in eng.completed] \
+        == [r.rid for r in rej]
+    done = eng.drain()
+    assert [r.rid for r in done] == [ok.rid] and ok.status == "done"
+    with pytest.raises(ValueError):
+        RequestQueue(max_pending=0)
+
+
+def test_deadline_expires_queued_request_before_admission():
+    t = [0.0]
+    eng = ServeEngine(_toy_model(), _peaked(3), max_len=32, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)),
+                      now=lambda: t[0])
+    req = eng.submit([1, 2], max_new=4, deadline_s=1.0)
+    t[0] = 2.0                         # budget elapses while still queued
+    done = eng.step()
+    assert [r.rid for r in done] == [req.rid]
+    assert req.status == "deadline_exceeded" and req.done
+    assert req.tokens == [] and req.admit_t is None and req.finish_t == 2.0
+    assert len(eng.queue) == 0 and eng.live_count == 0
+    with pytest.raises(ValueError):
+        eng.submit([1], max_new=1, deadline_s=0.0)
+
+
+def test_deadline_expires_mid_decode_and_frees_the_slot():
+    t = [0.0]
+    eng = ServeEngine(_toy_model(), _peaked(3), max_len=32, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)),
+                      now=lambda: t[0])
+    req = eng.submit([1, 2], max_new=10, deadline_s=1.0)
+    eng.step()
+    assert req.status == "live" and len(req.tokens) >= 1
+    emitted = len(req.tokens)
+    t[0] = 1.5                         # budget elapses mid-decode
+    done = eng.step()
+    assert [r.rid for r in done] == [req.rid]
+    assert req.status == "deadline_exceeded"
+    assert len(req.tokens) == emitted  # already-emitted tokens are kept
+    assert eng.live_count == 0         # the lane freed for new work
+    nxt = eng.submit([3, 4], max_new=2)
+    eng.drain()
+    assert nxt.status == "done"
+
+
+def test_drain_timeout_names_stuck_work():
+    eng = ServeEngine(_toy_model(), _peaked(3), max_len=64, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)))
+    live = eng.submit([1, 2], max_new=50)
+    queued = eng.submit([3, 4], max_new=50)
+    with pytest.raises(TimeoutError) as exc:
+        eng.drain(max_ticks=3)
+    msg = str(exc.value)
+    assert f"(0, {live.rid})" in msg and str(queued.rid) in msg
+
+
+def test_node_crash_reaggregates_consensus_mid_flight_without_retraces():
+    """fail_node mid-request: the in-flight consensus re-forms over the
+    surviving ensemble lanes on the very next dispatch — no retrace, no
+    drop, and restore_node re-admits the lane the same way."""
+    eng = ServeEngine(_toy_model(),
+                      _per_node_peaked([(3, 5.0), (3, 5.0), (9, 4.0)]),
+                      mode="consensus", max_len=32, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)))
+    eng.submit([1, 2, 3], max_new=2)   # warm every (kind, shape)
+    eng.drain()
+    warm = dict(eng.trace_counts)
+
+    req = eng.submit([1, 2, 3], max_new=6)
+    eng.step()                         # 2 tokens under full membership
+    assert req.tokens == [3, 3]        # majority out-votes the dissenter
+    eng.fail_node(0)
+    eng.fail_node(1)                   # only the token-9 lane survives
+    assert eng.node_mask.tolist() == [False, False, True]
+    eng.step()
+    eng.restore_node(0)                # recovery: 3-lane vs 9-lane tie is
+    eng.drain()                        # broken by node 0's taller peak
+    assert req.status == "done" and req.tokens == [3, 3, 9, 3, 3, 3]
+    assert dict(eng.trace_counts) == warm      # mask flips never retrace
+
+
+def test_node_mask_guard_rails():
+    eng = ServeEngine(_toy_model(), _peaked(3), max_len=32, max_slots=1,
+                      policy=BucketPolicy(batch_buckets=(1,),
+                                          seq_buckets=(8,)))
+    with pytest.raises(ValueError, match="at least one"):
+        eng.set_node_mask([False] * N)
+    with pytest.raises(ValueError, match="entries"):
+        eng.set_node_mask([True] * (N + 1))
+    mask = eng.node_mask
+    mask[0] = False                    # property returns a copy
+    assert eng.node_mask.all()
+
+
 def test_engine_rejects_oversized_work():
     model = _toy_model()
     eng = ServeEngine(model, _peaked(1), max_len=10,
