@@ -42,6 +42,14 @@ jitted op where timing is meaningful; derived = the figure's headline metric).
                     one-request-at-a-time dispatch × consensus/average
                     ensemble modes — requests/sec, p99 latency and timed-
                     region retrace counts, written to BENCH_serve.json
+  hetero_swarm      heterogeneous swarm (ISSUE 10): the scenario grid
+                    (iid / paper / biased-label / synthetic-augmented /
+                    dirichlet partitions) over the frozen-backbone model
+                    zoo with adapter-only ``payload="lora"`` int8 sync —
+                    per-cell wall time, wire bytes vs the full-payload f32
+                    counterfactual, per-site gate-metric spread vs the
+                    centralized oracle and retrace counters, written to
+                    BENCH_hetero.json
   fault_matrix      chaos plane (ISSUE 9): every FaultPlan kind (crash,
                     straggle, drop, corrupt, preempt) × backend × merge,
                     replayed against a fault-free twin — rounds-to-recover,
@@ -1079,6 +1087,52 @@ def fault_matrix_smoke():
     fault_matrix(smoke=True)
 
 
+def hetero_swarm(smoke: bool = False):
+    """Heterogeneous swarm scenario grid (ISSUE 10): every grid cell runs
+    the frozen-backbone model zoo with adapter-only ``payload="lora"`` int8
+    sync and the fairness floor; rows (wire bytes vs full-payload f32,
+    per-site metric spread vs the centralized oracle, retrace counters)
+    land in BENCH_hetero.json (committed on full runs, scratch on --smoke).
+    Smoke keeps ALL grid cells — CI asserts ≥4 scenario rows — and shrinks
+    only the run scale."""
+    from repro.configs.base import SwarmConfig
+    from repro.experiments import scenarios
+
+    if smoke:
+        rcfg = scenarios.ScenarioRunConfig(
+            n_train=96, n_test=48, feat_dim=8, hidden=8, steps=8,
+            batch_size=4,
+            swarm=SwarmConfig(
+                n_nodes=4, sync_every=4, topology="ring", merge="fedavg",
+                payload="lora", wire_dtype="int8", wire_block=128,
+                val_threshold=0.0, gate_metric="auc", fairness_floor=0.05))
+    else:
+        rcfg = scenarios.ScenarioRunConfig()
+    rows = []
+    for scn in scenarios.scenario_grid():
+        t0 = time.perf_counter()
+        row = scenarios.run_scenario(scn, rcfg)
+        row["wall_s"] = time.perf_counter() - t0
+        rows.append(row)
+        print(f"hetero_{row['scenario']},{row['wall_s'] * 1e6:.0f},"
+              f"wire_bytes={row['wire_bytes_per_sync']:.0f};"
+              f"frac_of_full={row['wire_fraction_of_full']:.5f};"
+              f"retraces={row['retraces']};"
+              f"auc_spread={row['site_auc_spread']:.4f};"
+              f"oracle_gap={row['oracle_gap_auc']:.4f};"
+              f"fair_ok={row['fairness_ok_last']}")
+    data = dict(n_nodes=rcfg.n_nodes, steps=rcfg.steps,
+                sync_every=rcfg.swarm.sync_every,
+                schedule=rows[0]["schedule"], rows=rows)
+    path = _bench_json_update("hetero_smoke" if smoke else "hetero", data,
+                              smoke=smoke, filename="BENCH_hetero.json")
+    print(f"hetero_swarm_json,0,{path}")
+
+
+def hetero_swarm_smoke():
+    hetero_swarm(smoke=True)
+
+
 def merge_kernel_smoke():
     merge_kernel(1 << 14)
 
@@ -1091,13 +1145,14 @@ ALL = [fig2_node0, fig3_node3, fig4_node2_25pct, scarcity_node3_5pct,
        tbl_dbi, tbl_minority, merge_kernel, lora_payload, gossip_spectrum,
        sync_roundtrip, engine_roundtrip, overlap_roundtrip,
        dynamic_membership, spmd_parity, swarm_sync, ring_sync_parity,
-       mesh_wire, hier_sync, serve, fault_matrix]
+       mesh_wire, hier_sync, serve, hetero_swarm, fault_matrix]
 
 # seconds-scale subset covering every benchmark family (tier-1 smoke test)
 SMOKE = [merge_kernel_smoke, gossip_spectrum, sync_roundtrip,
          engine_roundtrip, overlap_roundtrip_smoke, dynamic_membership_smoke,
          spmd_parity_smoke, swarm_sync_smoke, ring_sync_parity_smoke,
-         mesh_wire_smoke, hier_sync_smoke, serve_smoke, fault_matrix_smoke]
+         mesh_wire_smoke, hier_sync_smoke, serve_smoke, hetero_swarm_smoke,
+         fault_matrix_smoke]
 
 
 def roofline_table():

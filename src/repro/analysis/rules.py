@@ -640,6 +640,8 @@ class SoleImpl:
     it contains every listed signature element. Elements:
       ``constant:<value>``  — a numeric literal (e.g. the 127.0 q8 scale)
       ``call:<name>``       — a call whose terminal name matches
+      ``string:<value>``    — an exact string literal (e.g. the "lora_"
+                              adapter-path marker)
     """
     name: str
     allowed: str                 # the one repo-relative path allowed to host it
@@ -655,6 +657,14 @@ SOLE_IMPLS: Tuple[SoleImpl, ...] = (
         allowed="src/repro/core/comms.py",
         signature=("constant:127.0", "call:round"),
         description="int8 block-quantization core (scale-to-127 + round)"),
+    SoleImpl(
+        name="adapter_flatten",
+        allowed="src/repro/core/lora.py",
+        signature=("call:tree_flatten_with_path", "string:lora_"),
+        description="adapter payload flatten/unflatten core (the path-keyed "
+                    "flat dict the heterogeneous wire stacks; engine, "
+                    "gossip, and kernel paths must share lora.flatten_"
+                    "payload/unflatten_payload)"),
 )
 
 
@@ -673,24 +683,32 @@ class SoleImplementationRule(Rule):
     def _matches(scope_nodes, spec: SoleImpl) -> bool:
         need_const: Set[float] = set()
         need_call: Set[str] = set()
+        need_str: Set[str] = set()
         for sig in spec.signature:
             kind, _, val = sig.partition(":")
             if kind == "constant":
                 need_const.add(float(val))
             elif kind == "call":
                 need_call.add(val)
+            elif kind == "string":
+                need_str.add(val)
         found_const: Set[float] = set()
         found_call: Set[str] = set()
+        found_str: Set[str] = set()
         for n in scope_nodes:
-            if (isinstance(n, ast.Constant)
-                    and isinstance(n.value, (int, float))
-                    and float(n.value) in need_const):
-                found_const.add(float(n.value))
+            if isinstance(n, ast.Constant):
+                if (isinstance(n.value, (int, float))
+                        and not isinstance(n.value, bool)
+                        and float(n.value) in need_const):
+                    found_const.add(float(n.value))
+                if isinstance(n.value, str) and n.value in need_str:
+                    found_str.add(n.value)
             if isinstance(n, ast.Call):
                 name = _attr_name(n.func)
                 if name in need_call:
                     found_call.add(name)
-        return found_const == need_const and found_call == need_call
+        return (found_const == need_const and found_call == need_call
+                and found_str == need_str)
 
     def check(self, module: Module, ctx: LintContext) -> List[Finding]:
         out: List[Finding] = []

@@ -149,6 +149,17 @@ class SwarmConfig:
     topology: str = "ring"        # ring | full | dynamic
     merge: str = "fedavg"         # mean | fedavg | fisher | gradmatch
     lora_only: bool = True        # paper: exchange LoRA-adapter weights only
+    # what SwarmState.params covers (docs/heterogeneous.md):
+    #   "full" — the stacked state is every node's full param pytree;
+    #            lora_only then selects the adapter SUBTREE at sync time.
+    #   "lora" — heterogeneous swarm: the stacked state IS the shared wire
+    #            payload (LoRA adapters + decoder head, one flat path-keyed
+    #            dict per node via `core.lora.flatten_payload`); each node's
+    #            frozen, architecture-specific backbone stays local inside
+    #            its train/eval closure and never crosses the wire. Needs a
+    #            compiled backend; per-node closure lists ("model zoo") are
+    #            engine-backend only.
+    payload: str = "full"
     lora_rank: int = 16
     lora_alpha: float = 32.0
     val_threshold: float = 0.8    # paper: validation-based acceptance at 80%
@@ -182,6 +193,14 @@ class SwarmConfig:
     # in-graph on the post-quarantine membership mask, so membership
     # changes never retrace.
     quorum: int = 0
+    # per-site fairness gate (docs/heterogeneous.md): minimum gate metric
+    # (cfg.gate_metric — worst-site sensitivity/AUC in the paper's reading)
+    # that every ACTIVE site's merged candidate must clear for the round to
+    # commit. Below the floor every gate is held closed — like `quorum`, the
+    # whole swarm keeps its locals rather than committing a merge that
+    # degrades the worst site. 0.0 disables; evaluated in-graph on the
+    # traced per-site metrics, so metric/membership swings never retrace.
+    fairness_floor: float = 0.0
     seed: int = 0
 
 

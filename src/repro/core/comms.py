@@ -45,6 +45,17 @@ compression-aware reductions (`core.gossip`: quantized-chunk reduce-scatter
 + local dequant + quantized all_gather) whose payloads ride the wire at one
 byte per value — the picker follows the bytes, not the table.
 
+**Adapter-only (lora) payload class.** The factor formulas above are per
+payload value, so they hold unchanged when only the LoRA adapters + decoder
+head cross the wire (``cfg.lora_only`` carving the adapter subtree out of a
+full state, or the heterogeneous ``cfg.payload = "lora"`` mode where the
+stacked state IS the flat adapter payload — docs/heterogeneous.md). What
+changes is P: the adapter count, orders of magnitude below the full model,
+which compounds multiplicatively with the int8 wire (1 byte/value + scale
+overhead vs 4). Every candidate carries its payload class in
+``SyncSchedule.payload`` and CHANGES.md keeps a per-class values/sync table
+that the drift gate re-derives from :func:`pick_schedule` in CI.
+
 **Two-level (pod, node) meshes.** A swarm spanning pods has two link
 classes: cheap intra-pod (ICI) links and the scarce cross-pod (DCN) hop.
 On a 2-D mesh every schedule prices its traffic per class
@@ -98,6 +109,36 @@ def validate_wire_block(wire_block: int) -> int:
     return wire_block
 
 
+PAYLOAD_MODES = ("full", "lora")
+
+
+def payload_mode(cfg) -> str:
+    """``cfg.payload`` with validation — what the stacked state covers.
+
+    ``"full"`` (default): SwarmState.params is every node's full pytree and
+    ``cfg.lora_only`` selects the adapter subtree at sync time. ``"lora"``:
+    the heterogeneous-swarm mode — the state IS the wire payload (one flat
+    path-keyed adapter dict per node, `core.lora.flatten_payload`) and each
+    node's frozen backbone lives inside its closures (docs/heterogeneous.md).
+    """
+    mode = getattr(cfg, "payload", "full") or "full"
+    if mode not in PAYLOAD_MODES:
+        raise ValueError(f"unknown payload mode {mode!r} "
+                         f"(choose from {PAYLOAD_MODES})")
+    return mode
+
+
+def split_payload_at_sync(cfg) -> bool:
+    """True when sync must carve the adapter subtree out of a full state.
+
+    In ``payload="lora"`` mode there is nothing to carve — the state already
+    is the payload — so ``lora_only`` is satisfied structurally and the
+    engine/host split-at-sync paths turn off."""
+    if not getattr(cfg, "lora_only", False):
+        return False
+    return payload_mode(cfg) != "lora"
+
+
 # ---------------------------------------------------------------------------
 # cost model + schedule picker
 # ---------------------------------------------------------------------------
@@ -127,6 +168,13 @@ class SyncSchedule:
     cross_factor: Optional[float] = None
     intra_factor: float = 0.0
     intra_dtype: str = "f32"
+    # payload class: "full" = whole param pytree crosses the wire; "lora" =
+    # only the adapter subtree / adapter-only state does (P is then the
+    # adapter count — orders of magnitude smaller, and it compounds with the
+    # int8 wire). Purely descriptive for the factor formulas (identical per
+    # class) but load-bearing for the CHANGES.md drift gate, which re-derives
+    # the lora rows per class from pick_schedule.
+    payload: str = "full"
 
     def _leg_bytes(self, vals: float, dtype: str) -> float:
         out = vals * WIRE_BYTES[dtype]
@@ -166,6 +214,8 @@ class SyncSchedule:
     def describe(self, payload_params: Optional[int] = None) -> str:
         p = _NOMINAL_P if payload_params is None else payload_params
         tag = " (simulated)" if self.simulated else ""
+        if self.payload != "full":
+            tag = f"/{self.payload}{tag}"
         out = (f"{self.name}[{self.collective}/{self.wire_dtype}]{tag}: "
                f"{self.payload_factor:g}·P values, "
                f"{self.bytes_per_sync(p) / 1e6:.3f} MB/sync at P={p}")
@@ -201,9 +251,11 @@ def candidate_schedules(cfg, *, per: int = 1, model_sharded: bool = False,
     # collective may cross pods, so the whole payload prices as cross-pod
     flat_kw = lambda factor: (
         {"cross_factor": factor, "intra_factor": 0.0} if two_level else {})
+    pcls = ("lora" if (payload_mode(cfg) == "lora"
+                       or getattr(cfg, "lora_only", False)) else "full")
     mk = lambda name, coll, factor, wdt: SyncSchedule(
         name, coll, factor, wire_dtype=wdt, wire_block=wb,
-        **flat_kw(factor))
+        payload=pcls, **flat_kw(factor))
 
     out: List[SyncSchedule] = []
     if weighted:
@@ -248,12 +300,13 @@ def candidate_schedules(cfg, *, per: int = 1, model_sharded: bool = False,
                 out.append(SyncSchedule(
                     "hier_fisher_ring_q8", "hier_ring",
                     2.0 * (cross + intra), wire_dtype=wd, wire_block=wb,
-                    cross_factor=2.0 * cross, intra_factor=2.0 * intra))
+                    cross_factor=2.0 * cross, intra_factor=2.0 * intra,
+                    payload=pcls))
             else:
                 out.append(SyncSchedule(
                     "hier_fedavg_ring_q8", "hier_ring", cross + intra,
                     wire_dtype=wd, wire_block=wb,
-                    cross_factor=cross, intra_factor=intra))
+                    cross_factor=cross, intra_factor=intra, payload=pcls))
     return out
 
 

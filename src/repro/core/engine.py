@@ -112,6 +112,63 @@ def default_interpret() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# model-zoo dispatch: per-node closures over a shared stacked payload
+# ---------------------------------------------------------------------------
+# In the heterogeneous payload="lora" mode every node's frozen backbone lives
+# inside its own train/eval closure and only the shared adapter payload is
+# stacked. A single vmap can't dispatch to N different programs, so zoo
+# closure lists lower to an unrolled per-node call whose outputs restack —
+# same (stacked in, stacked out) contract as the vmapped homogeneous path.
+# Engine backend only: on gossip the node axis is sharded, and per-node
+# indexing would lower to cross-shard gathers.
+
+def _index_node(tree, i: int):
+    """Row ``i`` of every stacked leaf (None subtrees pass through)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _stack_nodes(trees):
+    """Inverse of :func:`_index_node` over a list of per-node pytrees."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def zoo_vstep(step_fns: Sequence[Callable]) -> Callable:
+    """Stacked train-step dispatcher over per-node closures.
+
+    Each ``step_fns[i]`` sees node i's (payload, opt_state, batch) rows and
+    must return the same 3-tuple ``(params, opt_state, metrics)`` — or the
+    true-Fisher 4-tuple — with structurally identical payload/metrics
+    pytrees across nodes (the stacked-state contract; backbones may differ
+    arbitrarily inside the closures)."""
+    step_fns = list(step_fns)
+    n = len(step_fns)
+
+    def vstep(p, o, b, s):
+        outs = [step_fns[i](_index_node(p, i), _index_node(o, i),
+                            _index_node(b, i), s) for i in range(n)]
+        k = len(outs[0])
+        if any(len(out) != k for out in outs):
+            raise ValueError("zoo train steps must agree on the 3-tuple vs "
+                             "true-Fisher 4-tuple return form")
+        return tuple(_stack_nodes([out[j] for out in outs])
+                     for j in range(k))
+
+    return vstep
+
+
+def zoo_veval(eval_fns: Sequence[Callable]) -> Callable:
+    """Stacked eval dispatcher: node i's closure scores its own payload row
+    on its own validation rows → ``[N]`` metric vector."""
+    eval_fns = list(eval_fns)
+
+    def veval(p, val):
+        return jnp.stack([fn(_index_node(p, i), _index_node(val, i))
+                          for i, fn in enumerate(eval_fns)])
+
+    return veval
+
+
+# ---------------------------------------------------------------------------
 # pure building blocks (shared by engine, SwarmLearner, and SPMD paths)
 # ---------------------------------------------------------------------------
 
@@ -169,7 +226,7 @@ def strategy_propose(stacked, cfg: SwarmConfig, W, *, fishers=None,
     only graph-neighbour contributions enter each node's candidate.
     """
     strategy = strategy or merge_lib.get_strategy(cfg)
-    if cfg.lora_only:
+    if comms.split_payload_at_sync(cfg):
         adapters, base = split_adapters(stacked)
         f_payload = (split_adapters(fishers)[0] if fishers is not None
                      else None)
@@ -223,7 +280,7 @@ def host_commit(stacked, candidate, W, gates, cfg: SwarmConfig, *, imp=None,
     """
     if cfg.merge in ("mean", "fedavg") or imp is not None:
         kw = dict(block=block, interpret=interpret)
-        if cfg.lora_only:
+        if comms.split_payload_at_sync(cfg):
             adapters, base = split_adapters(stacked)
             merged = fused_merge_tree(adapters, W, None, gates, imp=imp, **kw)
             return combine(merged, base)
@@ -310,6 +367,16 @@ class SwarmEngine:
         if self.quorum > cfg.n_nodes:
             raise ValueError(f"quorum={self.quorum} can never be met with "
                              f"n_nodes={cfg.n_nodes}")
+        # what the stacked state covers (full pytree vs adapter-only flat
+        # payload) and whether sync still needs to carve the adapter subtree
+        # out of it — docs/heterogeneous.md
+        self.payload_mode = comms.payload_mode(cfg)
+        self._split_lora = comms.split_payload_at_sync(cfg)
+        # per-site fairness floor, ANDed into the commit gate like quorum
+        self.fairness_floor = float(getattr(cfg, "fairness_floor", 0.0) or 0.0)
+        if not 0.0 <= self.fairness_floor <= 1.0:
+            raise ValueError("fairness_floor must be a gate-metric value in "
+                             f"[0, 1], got {self.fairness_floor}")
         # the comms cost model picks the sync schedule at trace time: for
         # the gossip backend this decides which collectives propose lowers
         # to; for host it reports the SPMD-equivalent wire cost (simulated).
@@ -340,9 +407,33 @@ class SwarmEngine:
             model_sharded=(backend == "gossip"
                            and comms.has_inner_sharding(param_specs)),
             mesh_shape=self.mesh_shape)
-        self._vstep = (None if train_step_fn is None
-                       else jax.vmap(train_step_fn, in_axes=(0, 0, 0, None)))
-        self._veval = None if eval_fn is None else jax.vmap(eval_fn)
+        # per-node closure lists ("model zoo", heterogeneous backbones)
+        # dispatch through the unrolled zoo_vstep/zoo_veval instead of vmap
+        zoo = (isinstance(train_step_fn, (list, tuple))
+               or isinstance(eval_fn, (list, tuple)))
+        if zoo and backend == "gossip":
+            raise ValueError(
+                "per-node closure lists (model zoo) are engine-backend only: "
+                "the gossip backend shards the node axis and per-node "
+                "dispatch would lower to cross-shard gathers")
+
+        def _fn_list(fn, what):
+            fns = list(fn)
+            if len(fns) != cfg.n_nodes:
+                raise ValueError(f"{what} zoo must list one closure per node "
+                                 f"(got {len(fns)}, n_nodes={cfg.n_nodes})")
+            return fns
+
+        if isinstance(train_step_fn, (list, tuple)):
+            self._vstep = zoo_vstep(_fn_list(train_step_fn, "train_step_fn"))
+        else:
+            self._vstep = (None if train_step_fn is None
+                           else jax.vmap(train_step_fn,
+                                         in_axes=(0, 0, 0, None)))
+        if isinstance(eval_fn, (list, tuple)):
+            self._veval = zoo_veval(_fn_list(eval_fn, "eval_fn"))
+        else:
+            self._veval = None if eval_fn is None else jax.vmap(eval_fn)
         self._base_W = mixing_matrix(cfg, self.data_sizes)
         self.spectral_gap = topo.spectral_gap(self._base_W)
 
@@ -469,7 +560,7 @@ class SwarmEngine:
                  if cfg.merge == "fedavg"
                  else jnp.ones(cfg.n_nodes, jnp.float32))
         weights = sizes / sizes.sum()
-        if cfg.lora_only:
+        if self._split_lora:
             payload, base = split_adapters(stacked)
             if specs is not None:
                 specs = split_adapters(
@@ -590,7 +681,7 @@ class SwarmEngine:
                                               self.axis, inner_specs=specs,
                                               wire_dtype=wire_cast)
 
-        return (combine(merged, base) if cfg.lora_only else merged), new_wire
+        return (combine(merged, base) if self._split_lora else merged), new_wire
 
     # -- gated sync ----------------------------------------------------------
 
@@ -604,7 +695,7 @@ class SwarmEngine:
         (`gossip.init_mesh_wire`); bf16 stays a stateless cast (no state)."""
         if wire is not None or self.wire_dtype == "f32":
             return wire
-        payload = (split_adapters(params)[0] if self.cfg.lora_only
+        payload = (split_adapters(params)[0] if self._split_lora
                    else params)
         if self.backend == "host":
             return comms.init_wire(payload)
@@ -652,7 +743,7 @@ class SwarmEngine:
                 "(FaultPlan.lower(corrupt_in_graph=False))")
         log = {}
         if use_wire:
-            if self.cfg.lora_only:
+            if self._split_lora:
                 payload, base = split_adapters(params)
             else:
                 payload, base = params, None
@@ -679,7 +770,7 @@ class SwarmEngine:
                 f = (stats if stats is not None
                      else jax.tree.map(jnp.zeros_like, params))
                 f = self.strategy.finalize_mass(f, a)
-                if self.cfg.lora_only:
+                if self._split_lora:
                     # only the payload's mass crosses the wire — don't burn
                     # a full-model quantize pass on base leaves propose will
                     # immediately discard
@@ -714,6 +805,18 @@ class SwarmEngine:
             quorum_ok = jnp.sum(a.astype(jnp.int32)) >= q
             gates = gates & quorum_ok
             log["quorum_ok"] = quorum_ok
+        if self.fairness_floor > 0.0:
+            # per-site fairness floor (docs/heterogeneous.md): the merged
+            # candidate must clear cfg.gate_metric at EVERY active site or
+            # the whole swarm holds its locals — a commit that helps the
+            # average while degrading the worst site never lands. Inactive
+            # sites read as 1.0 so they never drag the min; in-graph on the
+            # traced metrics, so metric/membership swings never retrace.
+            worst = jnp.min(jnp.where(a, metric_merged, 1.0))
+            fair_ok = worst >= self.fairness_floor
+            gates = gates & fair_ok
+            log["fairness_ok"] = fair_ok
+            log["worst_site"] = worst
         if use_wire:
             committed_payload, new_wire = fused_quant_merge_tree(
                 payload, wire, W, gates, imp=imp,

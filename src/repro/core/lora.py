@@ -66,6 +66,61 @@ def _paths(tree):
     return flat
 
 
+def payload_path_str(path) -> str:
+    """Canonical "/"-joined path string for a tree_*_with_path key tuple."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def flatten_payload(params, select=None):
+    """Flatten the wire-payload subtree to ONE flat ``{path: leaf}`` dict.
+
+    ``select(path_str) -> bool`` picks the leaves that cross the wire;
+    the default is :func:`is_adapter_path` (``lora_`` leaves). The result is
+    sorted by path, so every node with the same payload interface — whatever
+    its backbone architecture — produces a structurally identical pytree
+    that stacks along a node axis. :func:`unflatten_payload` is the inverse
+    against a full-params template.
+
+    This is THE single adapter flatten implementation (swarmlint SWL004
+    sole-impl ``adapter_flatten``): engine, gossip, and kernel paths all
+    share it, so payload membership can never silently diverge between what
+    is merged, what is quantized, and what is checkpointed.
+    """
+    if select is None:
+        select = is_adapter_path
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {payload_path_str(p): x for p, x in flat
+           if select(payload_path_str(p))}
+    if not out:
+        raise ValueError("flatten_payload: no leaf matched the payload "
+                         "selector (nothing would cross the wire)")
+    return dict(sorted(out.items()))
+
+
+def unflatten_payload(flat, template):
+    """Inverse of :func:`flatten_payload`: write the flat payload leaves
+    back into a full-params ``template`` pytree (the frozen local backbone
+    plus payload placeholders). Leaves whose path is not in ``flat`` pass
+    through from the template untouched; gradients flow through the payload
+    leaves only — exactly the frozen-backbone fine-tuning contract."""
+    used = set()
+
+    def sub(p, x):
+        s = payload_path_str(p)
+        if s in flat:
+            used.add(s)
+            return flat[s]
+        return x
+
+    out = jax.tree_util.tree_map_with_path(sub, template)
+    missing = set(flat) - used
+    if missing:
+        raise ValueError("unflatten_payload: payload paths not present in "
+                         f"the template: {sorted(missing)[:4]}")
+    return out
+
+
 def split_adapters(params, is_leaf=None) -> Tuple[dict, dict]:
     """(adapters, base) — same treedef, non-matching leaves replaced by None.
 

@@ -121,6 +121,10 @@ class SwarmSession:
         returns per-step grads. Must be traceable for the engine/gossip
         backends; arbitrary Python for ``backend="host"``.
     eval_fn : ``(params, val) -> scalar in [0, 1]`` (same traceability rule).
+        Both fns may instead be a LIST of ``n_nodes`` per-node closures
+        (model zoo: heterogeneous frozen backbones captured per closure,
+        shared adapter payload as the state — ``cfg.payload="lora"``,
+        engine backend only; see docs/heterogeneous.md).
     params / opt_state : a single per-node pytree (replicated N times), a
         list of N pytrees, or — with ``stacked=True`` — an already-stacked
         pytree with leading node axis.
@@ -163,6 +167,17 @@ class SwarmSession:
                 '(backend="engine" carries the error-feedback reference; '
                 '"gossip" carries the sharded mesh EF state for int8 and '
                 "casts bf16); the host loop is uncompressed")
+        if comms.payload_mode(cfg) == "lora" and backend == "host":
+            raise ValueError(
+                'payload="lora" (adapter-only state, heterogeneous '
+                "backbones in per-node closures) needs a compiled backend; "
+                "the host loop threads full per-node param pytrees")
+        if (backend == "host"
+                and (isinstance(train_step_fn, (list, tuple))
+                     or isinstance(eval_fn, (list, tuple)))):
+            raise ValueError(
+                "per-node closure lists (model zoo) are engine-backend "
+                "only; the host loop applies one callable to every node")
 
         if backend == "host":
             from repro.core.swarm import NodeState, SwarmLearner
@@ -180,7 +195,7 @@ class SwarmSession:
             self.engine = None
             self.sync_schedule = comms.pick_schedule(cfg, simulated=True)
             self.payload_params = comms.payload_param_count(
-                stacked_params, cfg.lora_only, n)
+                stacked_params, comms.split_payload_at_sync(cfg), n)
             self.predicted_sync_bytes = self.sync_schedule.bytes_per_sync(
                 self.payload_params)
             self.predicted_link_bytes = self.sync_schedule.bytes_by_link_class(
@@ -208,7 +223,7 @@ class SwarmSession:
         # two-level ("pod", "node") mesh ({"intra": ..., "cross": ...})
         self.sync_schedule = self.engine.sync_schedule
         self.payload_params = comms.payload_param_count(
-            stacked_params, cfg.lora_only, n)
+            stacked_params, comms.split_payload_at_sync(cfg), n)
         self.predicted_sync_bytes = self.sync_schedule.bytes_per_sync(
             self.payload_params)
         self.predicted_link_bytes = self.sync_schedule.bytes_by_link_class(
@@ -452,7 +467,7 @@ class SwarmSession:
         meta = load_metadata(path)
         saved_cfg = meta.get("cfg", {})
         for key in ("n_nodes", "merge", "topology", "lora_only",
-                    "wire_dtype"):
+                    "payload", "wire_dtype"):
             if key in saved_cfg and saved_cfg[key] != getattr(self.cfg, key):
                 raise ValueError(
                     f"checkpoint cfg mismatch: {key}={saved_cfg[key]!r} "

@@ -1,0 +1,365 @@
+"""Scenario grid: non-IID partitions + synthetic augmentation over the
+heterogeneous swarm.
+
+The paper's sites hold imbalanced, *biased* data; the fairness literature on
+swarm learning (PAPERS.md) shows per-site metrics must be measured, not
+assumed, and the generative-augmentation line motivates letting label-starved
+sites synthesize minority-class samples. This module turns those designs into
+a reproducible grid:
+
+  * :func:`scenario_grid` — named cells over partition strategies: iid, the
+    paper's 10/30/30/30 unbalanced split, biased-label allocations
+    (``class_bias``), biased labels + synthetic minority augmentation
+    (`data.synthetic.make_histo_dataset` with skewed ``class_probs``), and
+    Dirichlet non-IID sharding.
+  * :func:`build_shards` — materializes one cell into per-node (x, y) shards.
+  * :func:`run_scenario` — drives a ``payload="lora"`` model-zoo swarm
+    (`models.zoo`, engine backend, int8 EF wire by default) through the
+    cell and reports per-site test metrics, the spread between the best and
+    worst site, a centralized single-model oracle trained on the pooled
+    data with the same step budget, predicted wire bytes vs a full-payload
+    f32 sync, retrace counters, and the fairness-gate log
+    (``cfg.fairness_floor`` — docs/heterogeneous.md).
+
+`benchmarks/run.py --only hetero_swarm` sweeps the grid and commits the
+result as ``BENCH_hetero.json``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SwarmConfig, TrainConfig
+from repro.core import comms
+from repro.core.session import SwarmSession
+from repro.data import (augment, batches, dirichlet_shards, make_histo_dataset,
+                        paper_splits, shard_to_nodes)
+from repro.metrics import classify_report, gate_metric_fn
+from repro.models import zoo
+from repro.models.cnn import bce_loss
+from repro.optim import adamw_init, adamw_update, make_schedule
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One grid cell: how the shared corpus lands on the N sites.
+
+    partition:
+      ``iid``            uniform random equal shards
+      ``paper``          the paper's unbalanced 10/30/30/30 split
+      ``label_skew``     biased-label allocation — site i oversamples class
+                         i mod C by ``bias`` (the paper's "biased data
+                         allocations")
+      ``label_synth``    label_skew + each site augments its starved classes
+                         with ``synth_frac``·|shard| synthetic samples drawn
+                         from the generator with inverted class odds
+      ``dirichlet``      Dirichlet(α) non-IID federated sharding
+    """
+
+    name: str
+    partition: str
+    bias: float = 8.0
+    alpha: float = 0.3
+    synth_frac: float = 0.5
+    fractions: Tuple[float, ...] = (0.10, 0.30, 0.30, 0.30)
+
+
+def scenario_grid(n_nodes: int = 4) -> List[Scenario]:
+    """The benchmark grid — ≥4 cells, incl. the biased-label and
+    synthetic-augmentation scenarios the source papers call for."""
+    del n_nodes  # cells are partition strategies; N is a run_scenario knob
+    return [
+        Scenario("iid", "iid"),
+        Scenario("paper_unbalanced", "paper"),
+        Scenario("label_skew", "label_skew"),
+        Scenario("label_skew_synth", "label_synth"),
+        Scenario("dirichlet03", "dirichlet", alpha=0.3),
+    ]
+
+
+def _bias_rows(n_nodes: int, n_classes: int, bias: float) -> List[List[float]]:
+    """class_bias rows: site i oversamples class i mod C by ``bias``×."""
+    rows = []
+    for i in range(n_nodes):
+        row = [1.0] * n_classes
+        row[i % n_classes] = float(bias)
+        rows.append(row)
+    return rows
+
+
+def build_shards(scn: Scenario, images, labels, n_nodes: int, *,
+                 seed: int = 0, n_classes: int = 3, image_size: int = 16,
+                 noise: float = 1.1):
+    """Materialize one grid cell into per-node shards.
+
+    Returns ``(shards, n_synth)`` — shards is a list of N ``(x, y)`` pairs
+    and ``n_synth[i]`` counts site i's synthetic-augmentation samples (all
+    zero except in the ``label_synth`` cell).
+    """
+    n = len(labels)
+    n_synth = [0] * n_nodes
+    if scn.partition == "iid":
+        shards = shard_to_nodes(images, labels, [n // n_nodes] * n_nodes,
+                                seed=seed)
+    elif scn.partition == "paper":
+        shards = shard_to_nodes(images, labels,
+                                paper_splits(n, scn.fractions), seed=seed)
+    elif scn.partition in ("label_skew", "label_synth"):
+        shards = shard_to_nodes(images, labels, [n // n_nodes] * n_nodes,
+                                seed=seed,
+                                class_bias=_bias_rows(n_nodes, n_classes,
+                                                      scn.bias))
+        if scn.partition == "label_synth":
+            # generative augmentation for the non-IID problem: each site
+            # synthesizes samples with INVERTED class odds (starved classes
+            # oversampled), shrinking its label skew without sharing data
+            out = []
+            for i, (x, y) in enumerate(shards):
+                inv = [1.0 / w for w in _bias_rows(n_nodes, n_classes,
+                                                   scn.bias)[i]]
+                k = max(4, int(len(y) * scn.synth_frac))
+                sx, sy = make_histo_dataset(
+                    k, size=image_size, n_classes=n_classes,
+                    class_probs=inv, noise=noise, seed=seed * 1000 + 77 + i)
+                out.append((np.concatenate([x, sx]),
+                            np.concatenate([y, sy])))
+                n_synth[i] = k
+            shards = out
+    elif scn.partition == "dirichlet":
+        shards = dirichlet_shards(images, labels, n_nodes, alpha=scn.alpha,
+                                  seed=seed)
+        # a Dirichlet draw can starve a site entirely; float it on a few
+        # global samples so every site can still train and validate
+        shards = [(x, y) if len(y) >= 8 else (images[:8], labels[:8])
+                  for x, y in shards]
+    else:
+        raise ValueError(f"unknown partition {scn.partition!r}")
+    return shards, n_synth
+
+
+@dataclass
+class ScenarioRunConfig:
+    """Run-scale knobs, sized so the whole grid smokes on CPU."""
+
+    n_nodes: int = 4
+    n_train: int = 320
+    n_test: int = 160
+    image_size: int = 16  # make_histo_dataset tiles 8×8 blobs — keep ≥16
+    noise: float = 1.1
+    class_probs: tuple = (0.5, 0.3, 0.2)
+    feat_dim: int = 16
+    hidden: int = 16
+    lora_rank: int = 4
+    steps: int = 24
+    batch_size: int = 8
+    lr: float = 3e-3
+    val_frac: float = 0.25
+    seed: int = 0
+    swarm: SwarmConfig = field(default_factory=lambda: SwarmConfig(
+        n_nodes=4, sync_every=6, topology="ring", merge="fedavg",
+        payload="lora", wire_dtype="int8", wire_block=128,
+        val_threshold=0.0, gate_metric="auc", fairness_floor=0.05))
+
+
+def _zoo_closures(nodes, cfg: SwarmConfig, tc: TrainConfig, n_classes: int,
+                  trace_log: list):
+    """Per-node train/eval closures over the flat adapter payload.
+
+    ``trace_log`` grows by one per TRACE of the train step (the python body
+    runs only while tracing), so ``len(trace_log)`` deltas across rounds
+    count retraces — the zero-retrace evidence in BENCH_hetero.json."""
+    sched = make_schedule(tc)
+    metric = gate_metric_fn(cfg.gate_metric)
+
+    def make(node):
+        def loss(payload, x, y):
+            return bce_loss(node.apply(payload, x),
+                            jax.nn.one_hot(y, n_classes))
+
+        def train_step(payload, opt, batch, step):
+            trace_log.append(node.family)
+            x, y = batch
+            l, g = jax.value_and_grad(loss)(payload, x, y)
+            payload, opt = adamw_update(payload, g, opt, tc,
+                                        sched(opt["count"]))
+            return payload, opt, {"loss": l}
+
+        def eval_fn(payload, v):
+            x, y, m = v
+            return metric(jax.nn.sigmoid(node.apply(payload, x)), y, m)
+
+        return train_step, eval_fn
+
+    return [make(n) for n in nodes]
+
+
+def _batch_stream(trains, steps: int, batch_size: int, seed: int):
+    """[steps, N, B, H, W, 3] / [steps, N, B] stacked minibatch stream
+    (tiny shards resample with replacement — vmap needs one B)."""
+    n = len(trains)
+    bs = min(batch_size, max(len(y) for _, y in trains))
+    rngs = [np.random.default_rng(seed * 100 + i) for i in range(n)]
+    iters = [iter(()) for _ in range(n)]
+    h = trains[0][0].shape[1]
+    xs = np.empty((steps, n, bs, h, h, 3), np.float32)
+    ys = np.empty((steps, n, bs), np.int32)
+    for s in range(steps):
+        for i, (x, y) in enumerate(trains):
+            if len(y) < bs:
+                idx = rngs[i].integers(0, len(y), bs)
+                xs[s, i], ys[s, i] = augment(x[idx], rngs[i]), y[idx]
+                continue
+            try:
+                b = next(iters[i])
+            except StopIteration:
+                iters[i] = batches(x, y, bs, rngs[i])
+                b = next(iters[i])
+            xs[s, i], ys[s, i] = b
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+def _stack_vals(vals):
+    """Pad per-node validation sets to one length + validity mask."""
+    n = len(vals)
+    vmax = max(len(y) for _, y in vals)
+    h = vals[0][0].shape[1]
+    vx = np.zeros((n, vmax, h, h, 3), np.float32)
+    vy = np.zeros((n, vmax), np.int32)
+    vm = np.zeros((n, vmax), bool)
+    for i, (x, y) in enumerate(vals):
+        vx[i, :len(y)], vy[i, :len(y)], vm[i, :len(y)] = x, y, True
+    return jnp.asarray(vx), jnp.asarray(vy), jnp.asarray(vm)
+
+
+def _full_payload_f32_bytes(nodes, cfg: SwarmConfig) -> float:
+    """Counterfactual wire cost: the SAME schedule shape forced onto a
+    full-payload f32 sync at the zoo's mean full param count."""
+    full_cfg = SwarmConfig(
+        n_nodes=cfg.n_nodes, sync_every=cfg.sync_every,
+        topology=cfg.topology, merge=cfg.merge, lora_only=False,
+        val_threshold=cfg.val_threshold, gate_metric=cfg.gate_metric)
+    counts = [sum(int(x.size) for x in jax.tree.leaves(n.template))
+              for n in nodes]
+    p_full = int(np.mean(counts))
+    return comms.pick_schedule(full_cfg, simulated=True).bytes_per_sync(p_full)
+
+
+def run_scenario(scn: Scenario, rcfg: Optional[ScenarioRunConfig] = None) -> dict:
+    """One grid cell end-to-end. Returns the BENCH_hetero row dict."""
+    rcfg = rcfg or ScenarioRunConfig()
+    cfg = rcfg.swarm
+    n = cfg.n_nodes
+    images, labels = make_histo_dataset(
+        rcfg.n_train, size=rcfg.image_size, noise=rcfg.noise,
+        class_probs=rcfg.class_probs, seed=rcfg.seed)
+    test_x, test_y = make_histo_dataset(
+        rcfg.n_test, size=rcfg.image_size, noise=rcfg.noise,
+        class_probs=rcfg.class_probs, seed=rcfg.seed + 999)
+    shards, n_synth = build_shards(scn, images, labels, n, seed=rcfg.seed,
+                                   image_size=rcfg.image_size,
+                                   noise=rcfg.noise)
+
+    vals, trains = [], []
+    for x, y in shards:
+        n_val = max(4, int(len(y) * rcfg.val_frac))
+        vals.append((x[:n_val], y[:n_val]))
+        trains.append((x[n_val:], y[n_val:]))
+
+    nodes = zoo.build_zoo(jax.random.PRNGKey(rcfg.seed), n,
+                          image_size=rcfg.image_size, feat_dim=rcfg.feat_dim,
+                          hidden=rcfg.hidden, rank=rcfg.lora_rank)
+    tc = TrainConfig(lr=rcfg.lr, warmup_steps=4, max_steps=rcfg.steps,
+                     weight_decay=1e-4, schedule="cosine")
+    trace_log: list = []
+    fns = _zoo_closures(nodes, cfg, tc, n_classes=3, trace_log=trace_log)
+    payloads = [nd.payload() for nd in nodes]
+
+    sess = SwarmSession(cfg, [f[0] for f in fns], [f[1] for f in fns],
+                        params=payloads,
+                        opt_state=[adamw_init(p) for p in payloads],
+                        data_sizes=[len(y) for _, y in trains],
+                        seed=rcfg.seed)
+    xs, ys = _batch_stream(trains, rcfg.steps, rcfg.batch_size, rcfg.seed)
+    val = _stack_vals(vals)
+
+    t = cfg.sync_every
+    rounds = max(1, rcfg.steps // t)
+    logs = []
+    traces_round1 = None
+    for r in range(rounds):
+        logs.append(sess.round((xs[r * t:(r + 1) * t], ys[r * t:(r + 1) * t]),
+                               val))
+        if r == 0:
+            traces_round1 = len(trace_log)
+    retraces = len(trace_log) - traces_round1  # identical shapes → 0
+
+    # per-site test metrics: each site's committed payload row through its
+    # OWN frozen backbone, on the shared held-out test set
+    row_payloads = [
+        {k: v[i] for k, v in sess.state.params.items()} for i in range(n)]
+    per_site = []
+    for nd, pl in zip(nodes, row_payloads):
+        probs = np.asarray(jax.nn.sigmoid(nd.apply(pl, jnp.asarray(test_x))))
+        rep = classify_report(probs, test_y)
+        rep["family"] = nd.family
+        per_site.append(rep)
+
+    # centralized oracle: node 0's architecture on the pooled corpus with
+    # the same step budget — the "no privacy constraint" upper bound
+    oracle_fns = _zoo_closures(nodes[:1], cfg, tc, 3, trace_log=[])
+    o_step = jax.jit(oracle_fns[0][0])
+    p0, o0 = payloads[0], adamw_init(payloads[0])
+    rng = np.random.default_rng(rcfg.seed)
+    it = iter(())
+    for step in range(rcfg.steps):
+        try:
+            b = next(it)
+        except StopIteration:
+            it = batches(images, labels, rcfg.batch_size, rng)
+            b = next(it)
+        p0, o0, _ = o_step(p0, o0, (jnp.asarray(b[0]), jnp.asarray(b[1])),
+                           step)
+    oprobs = np.asarray(jax.nn.sigmoid(nodes[0].apply(p0, jnp.asarray(test_x))))
+    oracle = classify_report(oprobs, test_y)
+
+    aucs = [r["auc"] for r in per_site]
+    sens = [r["sensitivity"] for r in per_site]
+    last = logs[-1]
+    out = {
+        "scenario": scn.name,
+        "partition": scn.partition,
+        "families": [nd.family for nd in nodes],
+        "shard_sizes": [len(y) for _, y in shards],
+        "n_synth": n_synth,
+        "schedule": sess.sync_schedule.name,
+        "payload_class": sess.sync_schedule.payload,
+        "payload_params": int(sess.payload_params),
+        "wire_bytes_per_sync": float(sess.predicted_sync_bytes),
+        "full_f32_bytes_per_sync": _full_payload_f32_bytes(nodes, cfg),
+        "retraces": int(retraces),
+        "rounds": rounds,
+        "per_site": per_site,
+        "site_auc_spread": float(max(aucs) - min(aucs)),
+        "site_sensitivity_spread": float(max(sens) - min(sens)),
+        "worst_site_auc": float(min(aucs)),
+        "oracle": oracle,
+        "oracle_gap_auc": float(oracle["auc"] - float(np.mean(aucs))),
+        "gates_last": np.asarray(last["gates"]).astype(int).tolist(),
+    }
+    out["wire_fraction_of_full"] = (out["wire_bytes_per_sync"]
+                                    / max(out["full_f32_bytes_per_sync"], 1.0))
+    if "fairness_ok" in last:
+        out["fairness_ok_last"] = bool(np.asarray(last["fairness_ok"]))
+        out["worst_site_gate_metric"] = float(np.asarray(last["worst_site"]))
+    return out
+
+
+def run_grid(rcfg: Optional[ScenarioRunConfig] = None,
+             cells: Optional[List[Scenario]] = None) -> List[dict]:
+    """Sweep the grid — the BENCH_hetero.json payload."""
+    rcfg = rcfg or ScenarioRunConfig()
+    return [run_scenario(s, rcfg) for s in (cells or scenario_grid())]

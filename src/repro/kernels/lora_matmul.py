@@ -76,3 +76,26 @@ def lora_matmul(x, w, a, b, scale, *, bm: int = 128, bn: int = 128,
         ],
         interpret=interpret,
     )(x, w, a, b, jnp.asarray(scale, jnp.float32).reshape(1))
+
+
+def lora_apply(x, w, a, b, scale, *, interpret=None):
+    """LoRA'd linear ``x @ W + scale·(x @ A) @ B`` with automatic dispatch.
+
+    On TPU with MXU-tileable dims this is the fused Pallas kernel above
+    (both low-rank intermediates stay in VMEM); elsewhere — interpret mode,
+    or dims a tile doesn't divide (the model-zoo heads are small and
+    arbitrary) — it is the mathematically identical unfused XLA form with
+    f32 accumulation. One call site per layer, one numeric contract.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = x.shape
+    n = w.shape[1]
+    tiled = all(d % min(t, d) == 0
+                for d, t in ((m, 128), (n, 128), (k, 512)))
+    if not interpret and tiled:
+        return lora_matmul(x, w, a, b, scale)
+    xf = x.astype(jnp.float32)
+    wf, af, bf = (t.astype(jnp.float32) for t in (w, a, b))
+    y = xf @ wf + jnp.asarray(scale, jnp.float32) * ((xf @ af) @ bf)
+    return y.astype(x.dtype)

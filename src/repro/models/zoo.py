@@ -1,0 +1,186 @@
+"""Model zoo: heterogeneous frozen backbones + ONE shared LoRA'd head.
+
+The paper's hospital sites are *unlike*: different compute budgets, different
+(possibly pre-trained) feature extractors. The heterogeneous swarm keeps each
+site's backbone frozen and local — it never crosses the wire — and shares
+only a small common head: a LoRA-adapted projection over a ``feat_dim``
+feature interface plus the decoder layer. That shared payload is the entire
+swarm state in ``cfg.payload = "lora"`` mode (docs/heterogeneous.md):
+
+  node i state row = flatten_payload({"backbone": bb_i, "head": head},
+                                     payload_select)
+                   = {"head/out/b", "head/out/w",
+                      "head/proj/lora_A", "head/proj/lora_B",
+                      "head/proj/lora_scale"}
+
+Every backbone family must emit ``feat_dim`` features; the payload pytree is
+then structurally identical across nodes, so it stacks, merges, quantizes,
+and checkpoints exactly like a homogeneous swarm — at the adapter-only wire
+cost. The frozen ``proj`` base weight stays local (it is the per-site
+feature calibration LoRA adapts); the decoder ``out`` layer crosses raw.
+
+Backbones reuse in-tree families: DenseNet-lite encoders (`models.cnn`, the
+paper's own architecture at two scales) and MLP stacks (a structurally
+different pytree, proving the wire contract really is backbone-agnostic).
+The head projection runs through `kernels.lora_matmul.lora_apply`, so on TPU
+with tileable dims the shared payload hits the fused base+LoRA MXU kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import (flatten_payload, inject_lora, is_adapter_path,
+                             unflatten_payload)
+from repro.kernels.lora_matmul import lora_apply
+from repro.models.cnn import forward_cnn, init_cnn
+
+
+# ---------------------------------------------------------------------------
+# backbone families (frozen, local, architecture-specific)
+# ---------------------------------------------------------------------------
+
+def _cnn_features(params, images):
+    """DenseNet-lite features: the penultimate activation (its fc1 width is
+    built as ``feat_dim`` below, so the feature interface lines up)."""
+    return forward_cnn(params, images, return_features=True)[1]
+
+
+def _init_mlp(key, *, image_size: int, feat_dim: int, widths):
+    d = image_size * image_size * 3
+    layers = []
+    for w_out in tuple(widths) + (feat_dim,):
+        key, k = jax.random.split(key)
+        layers.append({"w": jax.random.normal(k, (d, w_out))
+                       * jnp.sqrt(2.0 / d),
+                       "b": jnp.zeros((w_out,))})
+        d = w_out
+    return {"layers": layers}
+
+
+def _mlp_features(params, images):
+    x = images.reshape(images.shape[0], -1)
+    for layer in params["layers"]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    return x
+
+
+def build_backbone(family: str, key, *, image_size: int, feat_dim: int):
+    """``(frozen_params, features_fn)`` for one zoo family.
+
+    ``features_fn(params, images [B,H,W,3]) -> [B, feat_dim]`` — the one
+    interface every family must honour for the shared head to compose.
+    """
+    if family == "densenet_s":
+        return (init_cnn(key, None, growth=4, stem=8, n_blocks=2,
+                         layers_per_block=2, feat_dim=24, hidden=feat_dim),
+                _cnn_features)
+    if family == "densenet_w":
+        return (init_cnn(key, None, growth=8, stem=16, n_blocks=2,
+                         layers_per_block=3, feat_dim=40, hidden=feat_dim),
+                _cnn_features)
+    if family == "mlp_deep":
+        return (_init_mlp(key, image_size=image_size, feat_dim=feat_dim,
+                          widths=(64, 64)), _mlp_features)
+    if family == "mlp_wide":
+        return (_init_mlp(key, image_size=image_size, feat_dim=feat_dim,
+                          widths=(128,)), _mlp_features)
+    raise ValueError(f"unknown zoo family {family!r} "
+                     f"(choose from {DEFAULT_FAMILIES})")
+
+
+DEFAULT_FAMILIES = ("densenet_s", "densenet_w", "mlp_deep", "mlp_wide")
+
+
+# ---------------------------------------------------------------------------
+# the shared head (what crosses the wire)
+# ---------------------------------------------------------------------------
+
+def init_head(key, *, feat_dim: int, hidden: int = 32, n_classes: int = 3,
+              rank: int = 4, alpha: float = 8.0):
+    """Shared head: LoRA'd projection (frozen base w) + raw decoder layer.
+
+    Initialized from ONE key shared across the swarm, so every node's
+    payload row starts identical (the warm-start the paper attributes to
+    shared pre-training)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    head = {
+        "proj": {"w": jax.random.normal(k1, (feat_dim, hidden))
+                 * jnp.sqrt(2.0 / feat_dim)},
+        "out": {"w": jax.random.normal(k2, (hidden, n_classes))
+                * jnp.sqrt(2.0 / hidden),
+                "b": jnp.zeros((n_classes,))},
+    }
+    return inject_lora(head, k3, rank=rank, alpha=alpha, targets="proj")
+
+
+def payload_select(path: str) -> bool:
+    """The wire membership rule: LoRA adapters + the decoder ``out`` layer.
+
+    The frozen ``proj`` base weight and every backbone leaf stay local."""
+    return is_adapter_path(path) or path.startswith("head/out/")
+
+
+def head_forward(head, feats):
+    """``feats [B, feat_dim] -> logits [B, n_classes]`` through the fused
+    base+LoRA matmul (`lora_apply` dispatches kernel vs unfused by shape)."""
+    p = head["proj"]
+    z = lora_apply(feats, p["w"], p["lora_A"], p["lora_B"], p["lora_scale"])
+    z = jax.nn.relu(z)
+    return z @ head["out"]["w"] + head["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# zoo assembly
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ZooNode:
+    """One heterogeneous site: frozen full-params template + features fn.
+
+    ``template`` holds the node's backbone and the head's frozen base; the
+    adapter payload rows are written into it at apply time. Everything here
+    is closure state — only the flat payload dict is swarm state.
+    """
+
+    family: str
+    template: Any
+    features: Callable
+
+    def payload(self):
+        """This node's wire payload (flat path-keyed dict, sorted)."""
+        return flatten_payload(self.template, payload_select)
+
+    def apply(self, payload, images):
+        """logits for ``images`` under ``payload`` (grads flow through the
+        payload leaves only — the frozen-backbone fine-tuning contract)."""
+        full = unflatten_payload(payload, self.template)
+        feats = self.features(full["backbone"], images)
+        return head_forward(full["head"], feats)
+
+
+def build_zoo(key, n_nodes: int, *, families: Optional[Sequence[str]] = None,
+              image_size: int = 16, feat_dim: int = 32, hidden: int = 32,
+              n_classes: int = 3, rank: int = 4,
+              alpha: float = 8.0) -> List[ZooNode]:
+    """N heterogeneous nodes around one shared head.
+
+    ``families`` cycles over :data:`DEFAULT_FAMILIES` by default, so a
+    4-node swarm gets four distinct backbone architectures."""
+    fams = tuple(families) if families else DEFAULT_FAMILIES
+    keys = jax.random.split(key, n_nodes + 1)
+    head = init_head(keys[-1], feat_dim=feat_dim, hidden=hidden,
+                     n_classes=n_classes, rank=rank, alpha=alpha)
+    nodes = []
+    for i in range(n_nodes):
+        fam = fams[i % len(fams)]
+        backbone, feats = build_backbone(fam, keys[i],
+                                         image_size=image_size,
+                                         feat_dim=feat_dim)
+        nodes.append(ZooNode(family=fam,
+                             template={"backbone": backbone, "head": head},
+                             features=feats))
+    return nodes

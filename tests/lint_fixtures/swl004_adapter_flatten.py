@@ -1,0 +1,28 @@
+# swarmlint: treat-as=src/repro/fixture_swl004_adapter.py
+"""SWL004 fixture: a rogue second implementation of the adapter flatten core.
+
+The sole_impl registry declares that the adapter payload flatten/unflatten
+core (``tree_flatten_with_path`` + the ``"lora_"`` adapter-path marker) lives
+only in core/lora.py — engine, gossip, and kernel paths must delegate to
+``lora.flatten_payload`` / ``lora.unflatten_payload`` rather than growing
+their own path-keyed dict builders. Partial matches (the tree walk without
+the marker, the marker without the tree walk) must stay clean.
+"""
+import jax
+
+
+def rogue_flatten(params):  # LINT-EXPECT: SWL004
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    return {"/".join(str(k) for k in p): v for p, v in leaves
+            if "lora_" in "/".join(str(k) for k in p)}
+
+
+def unrelated_tree_walk(params):
+    # walking the tree with paths is not the adapter core by itself
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    return len(leaves)
+
+
+def unrelated_marker(path):
+    # the adapter-path marker alone is not the core either
+    return "lora_" in path

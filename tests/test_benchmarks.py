@@ -196,6 +196,48 @@ def test_committed_serve_bench_reports_continuous_win():
     assert all(v > 1.0 for v in ratios.values())
 
 
+def test_smoke_covers_hetero_swarm(smoke_out):
+    """The heterogeneous-swarm grid (ISSUE 10): ≥4 scenario cells land in
+    the .bench/ scratch copy of BENCH_hetero.json, each with a wire-bytes
+    figure, a full-payload comparison and a zero retrace counter."""
+    path = _row(smoke_out, "hetero_swarm_json")[2].strip()
+    assert os.path.basename(os.path.dirname(path)) == ".bench"
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["hetero_smoke"]["rows"]
+    assert len(rows) >= 4
+    names = {r["scenario"] for r in rows}
+    assert {"label_skew", "label_skew_synth"} <= names
+    for r in rows:
+        assert r["payload_class"] == "lora"
+        assert r["wire_bytes_per_sync"] > 0
+        assert r["wire_fraction_of_full"] <= 0.05
+        assert r["retraces"] == 0
+        assert len(r["per_site"]) == doc["hetero_smoke"]["n_nodes"]
+        assert r["site_auc_spread"] >= 0
+
+
+def test_committed_hetero_bench_reports_wire_shrink_and_fairness():
+    """ISSUE 10 acceptance: the committed full-run BENCH_hetero.json carries
+    the fairness-gated biased-label scenario with its per-site metric spread,
+    and every cell's adapter-only int8 wire is ≤5% of the full-payload f32
+    bytes with zero retraces (deterministic artifact read)."""
+    with open(os.path.join(ROOT, "BENCH_hetero.json")) as f:
+        doc = json.load(f)
+    rows = doc["hetero"]["rows"]
+    assert len(rows) >= 4
+    by_name = {r["scenario"]: r for r in rows}
+    assert "label_skew" in by_name
+    skew = by_name["label_skew"]
+    assert skew["fairness_ok_last"] is True
+    assert skew["site_auc_spread"] >= 0
+    assert len(skew["per_site"]) == doc["hetero"]["n_nodes"]
+    for r in rows:
+        assert r["payload_class"] == "lora"
+        assert r["wire_fraction_of_full"] <= 0.05
+        assert r["retraces"] == 0
+
+
 def test_smoke_covers_dynamic_membership(smoke_out):
     """The join/leave/rejoin schedule runs and never retraces the compiled
     round: membership is runtime state, not a compile-time constant."""

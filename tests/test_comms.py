@@ -226,6 +226,28 @@ def _parse_hier_schedule_table():
     return rows
 
 
+def _parse_lora_schedule_table():
+    """Rows of the CHANGES.md adapter-only payload schedule table:
+    (topology, merges, wire, schedule, values-expr). The 5-cell format is
+    deliberately invisible to the flat (6-cell) and hier (7-cell) parsers."""
+    lines = open(_CHANGES_MD).read().splitlines()
+    start = next(i for i, l in enumerate(lines)
+                 if l.startswith("## Adapter-only payload schedule table"))
+    rows = []
+    for line in lines[start:]:
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) != 5 or cells[0] in ("topology", ""):
+            continue
+        if set(cells[0]) <= {"-"}:
+            continue
+        topo, merges, wire, sched, vals = cells
+        rows.append((topo, merges.split("/"), wire, sched, vals))
+    assert rows, "no adapter-only payload schedule table found in CHANGES.md"
+    return rows
+
+
 def _hier_values_per_sync(expr: str, k: int, m: int) -> float:
     """Evaluate a hierarchical-table expression ('(2(M−1)/M + 1)·P',
     'h·P/M', …): M = nodes/pod, h = cross-pod hops (1 at K=2, else 2)."""
@@ -271,6 +293,44 @@ def test_cost_model_drift_gate():
                     if got.wire_dtype == "int8":
                         want += v / got.wire_block * 4.0
                     assert got.bytes_per_sync(p) == pytest.approx(want)
+
+    # -- adapter-only payload class: the lora table ---------------------------
+    # both routes into the class must produce identical tagged schedules:
+    # lora_only (carve the adapters out of a full state at sync) and
+    # payload="lora" (the state IS the flat adapter payload, PR 10)
+    ltable = {}
+    for topo, merges, wire, sched, vals in _parse_lora_schedule_table():
+        for m in merges:
+            assert (topo, m, wire) not in ltable, ("duplicate lora row",
+                                                   topo, m, wire)
+            ltable[(topo, m, wire)] = (sched, vals)
+    for n in (3, 4, 16):
+        for topo in ("full", "ring", "dynamic"):
+            for m in ("mean", "fedavg", "fisher", "gradmatch"):
+                for wd in ("f32", "int8"):
+                    key = (topo, m, wd)
+                    picks = [
+                        comms.pick_schedule(_cfg(
+                            n_nodes=n, topology=topo, merge=m, wire_dtype=wd,
+                            lora_only=True)),
+                        comms.pick_schedule(_cfg(
+                            n_nodes=n, topology=topo, merge=m, wire_dtype=wd,
+                            payload="lora")),
+                    ]
+                    for got in picks:
+                        assert key in ltable, f"picker chose {got.name} " \
+                            f"for lora {key} but the table has no such row"
+                        sched, vals = ltable[key]
+                        assert got.payload == "lora", (key, got.name)
+                        assert "/lora" in got.describe(), got.describe()
+                        assert got.name == sched, (key, n, got.name, sched)
+                        assert got.payload_factor == pytest.approx(
+                            _values_per_sync(vals, n)), (key, n, vals)
+                    # untagged twin: same schedule/bytes, full payload class
+                    plain = comms.pick_schedule(
+                        _cfg(n_nodes=n, topology=topo, merge=m, wire_dtype=wd))
+                    assert plain.payload == "full"
+                    assert "/lora" not in plain.describe()
 
     # -- two-level (pod, node) meshes: the hierarchical table -----------------
     htable = {}

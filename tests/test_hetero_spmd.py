@@ -1,0 +1,185 @@
+"""Heterogeneous swarm on the mesh (ISSUE 10): adapter-only wire at scale.
+
+Multi-device checks for ``payload="lora"`` run in ONE subprocess with
+XLA_FLAGS forcing 4 host devices (same pattern as test_mesh_wire_spmd),
+each printing an ``OK <tag>`` marker the tests assert on. Pins the
+acceptance criteria:
+
+  * HLO-measured collective bytes of the adapter-only int8 sync are ≤ 5%
+    of syncing the full model state in f32 (the headline wire shrink),
+  * committed adapters ≤ 1e-5 of the numpy ring-mixing oracle after the
+    int8 EF wire settles (gossip backend, flat payload state),
+  * save → restore → continue is bit-identical for the flat adapter state
+    AND the mesh EF wire residuals,
+  * the cost model tags the gossip-backend lora schedule with the lora
+    payload class,
+  * per-node closure lists (the model zoo) are rejected on the gossip
+    backend even when a real mesh is supplied — the frozen-backbone
+    closures are an engine-backend construct.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.spmd
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+_CHECKS = """
+import os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import SwarmConfig
+from repro.core import gossip
+from repro.core.session import SwarmSession
+from repro.core.topology import build_matrix
+from repro.launch import hlo_stats
+from repro.models import zoo
+
+mesh = jax.make_mesh((4,), ("node",), devices=jax.devices()[:4])
+N, WB = 4, 128
+nodes = zoo.build_zoo(jax.random.PRNGKey(0), N, image_size=16,
+                      feat_dim=128, hidden=128, rank=2)
+payload0 = {k: jnp.stack([nd.payload()[k] for nd in nodes])
+            for k in nodes[0].payload()}
+p_payload = sum(int(v[0].size) for v in payload0.values())
+full_tree = jax.tree.map(
+    lambda t: jnp.broadcast_to(t, (N,) + t.shape), nodes[0].template)
+p_full = sum(int(l.size) for l in jax.tree.leaves(full_tree)) // N
+assert p_full > 20 * p_payload, (p_full, p_payload)
+Wring = build_matrix("ring", N)
+
+# --- HLO bytes: adapter-only int8 sync vs full-state f32 sync -------------
+wire = gossip.init_mesh_wire("ring_ppermute", payload0, n_shards=N,
+                             wire_block=WB)
+q8fn = jax.jit(lambda t, w: gossip.ring_rows_gossip_q8(
+    t, Wring, w, mesh, "node", wire_block=WB))
+f32fn = jax.jit(lambda t: gossip.ring_rows_gossip(t, Wring, mesh, "node"))
+cq = hlo_stats.collective_bytes(
+    q8fn.lower(payload0, wire).compile().as_text())
+cf = hlo_stats.collective_bytes(f32fn.lower(full_tree).compile().as_text())
+ratio = cq["total"] / cf["total"]
+# ISSUE 10 acceptance: adapter-only int8 moves ≤ 5% of full-payload f32
+assert ratio <= 0.05, (ratio, cq, cf)
+assert cq["all-gather"] == 0 and cq["all-reduce"] == 0, cq
+print(f"OK hetero_bytes ratio={ratio:.4f} p_full={p_full} "
+      f"p_payload={p_payload}")
+
+# --- settled commit: adapters match the numpy ring-mixing oracle ----------
+def id_step(p, o, b, s):
+    return p, o, {"loss": 0.0 * jnp.sum(p["head/out/w"])}
+
+def eval_fn(p, v):
+    return 1.0 - 0.0 * jnp.sum(p["head/out/w"])
+
+batches = jnp.zeros((1, N, 1))
+val = jnp.zeros((N, 1))
+
+def mk(thr):
+    return SwarmConfig(n_nodes=N, sync_every=1, topology="ring",
+                       merge="fedavg", payload="lora", lora_only=False,
+                       val_threshold=thr, wire_dtype="int8", wire_block=WB)
+
+# perturb the shared-init rows so the mix is non-trivial per node
+rng = np.random.default_rng(0)
+pstart = {k: v + jnp.asarray(rng.normal(0, 0.05, v.shape), v.dtype)
+          for k, v in payload0.items()}
+kw = dict(params=pstart, stacked=True, data_sizes=[1.0] * N,
+          backend="gossip", mesh=mesh, axis="node")
+sa = SwarmSession(mk(1.5), id_step, eval_fn, **kw)
+assert sa.sync_schedule.payload == "lora", sa.sync_schedule.describe()
+assert sa.payload_params == p_payload, (sa.payload_params, p_payload)
+for _ in range(6):
+    out = sa.round(batches, val)
+    assert not np.asarray(out["gates"]).any()
+sb = SwarmSession(mk(0.0), id_step, eval_fn, **kw)
+sb.load_state(sa.state)
+out = sb.round(batches, val)
+assert np.asarray(out["gates"]).all()
+W = np.asarray(Wring)
+for k, v in sb.state.params.items():
+    got = np.asarray(v)
+    want = np.tensordot(W, np.asarray(pstart[k]), axes=(1, 0))
+    err = np.abs(got - want).max()
+    assert err < 1e-5, (k, err)
+print("OK adapter_parity")
+
+# --- checkpoint: save -> restore -> continue == never stopping ------------
+def decay_step(p, o, b, s):
+    return ({k: v * 0.999 for k, v in p.items()}, o,
+            {"loss": 0.0 * jnp.sum(p["head/out/w"])})
+
+ccfg = mk(0.0)
+ref = SwarmSession(ccfg, decay_step, eval_fn, **kw)
+for _ in range(4):
+    ref.round(batches, val)
+s1 = SwarmSession(ccfg, decay_step, eval_fn, **kw)
+for _ in range(2):
+    s1.round(batches, val)
+path = os.path.join(tempfile.mkdtemp(), "hetero_mesh.msgpack")
+s1.save(path)
+s2 = SwarmSession.restore(path, ccfg, decay_step, eval_fn, **kw)
+for _ in range(2):
+    s2.round(batches, val)
+for k in ref.state.params:
+    np.testing.assert_array_equal(np.asarray(s2.state.params[k]),
+                                  np.asarray(ref.state.params[k]))
+for a, b in zip(jax.tree.leaves(s2.state.wire),
+                jax.tree.leaves(ref.state.wire)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK checkpoint")
+
+# --- the model zoo is engine-backend only, even with a real mesh ----------
+step_fns = [id_step] * N
+eval_fns = [eval_fn] * N
+try:
+    SwarmSession(mk(0.0), step_fns, eval_fns,
+                 params=[nd.payload() for nd in nodes],
+                 data_sizes=[1.0] * N, backend="gossip", mesh=mesh,
+                 axis="node")
+except ValueError as e:
+    assert "engine-backend only" in str(e), e
+    print("OK zoo_gossip_rejected")
+"""
+
+
+@pytest.fixture(scope="module")
+def spmd_out():
+    return _run(_CHECKS)  # module scope: the subprocess runs once
+
+
+def test_adapter_int8_bytes_under_five_percent_of_full_f32(spmd_out):
+    """ISSUE 10 acceptance: HLO-measured collective bytes of the adapter-only
+    int8 sync ≤ 5% of syncing the full model state in f32."""
+    assert "OK hetero_bytes" in spmd_out
+
+
+def test_committed_adapters_match_ring_oracle_on_mesh(spmd_out):
+    """Committed flat-payload adapters ≤ 1e-5 of the numpy ring-W oracle
+    after the mesh int8 EF wire settles."""
+    assert "OK adapter_parity" in spmd_out
+
+
+def test_lora_payload_mesh_checkpoint_bit_identical(spmd_out):
+    """save → restore → continue equals never stopping, for the flat adapter
+    state and the mesh EF wire residuals (ISSUE 10 satellite)."""
+    assert "OK checkpoint" in spmd_out
+
+
+def test_zoo_closures_rejected_on_gossip_backend(spmd_out):
+    """Per-node closure lists (the model zoo) stay engine-backend only even
+    when a real mesh is supplied."""
+    assert "OK zoo_gossip_rejected" in spmd_out
